@@ -1,0 +1,54 @@
+"""Kernel-path microbenches (new, TPU adaptation): packed bitmm / closure /
+intersect vs their dense jnp references — CPU timings exercise the blocked
+implementations; the Pallas kernels are the TPU deployment path (validated
+in interpret mode by tests/kernels)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, packed, ref
+
+from .common import Row, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    n = 4096 if quick else 16384
+    b = 32
+    dense = rng.random((n, n)) < 0.01
+    words = jnp.asarray(np.asarray(packed.pack(jnp.asarray(dense))))
+    x = jnp.asarray(rng.random((n, b)) < 0.2, jnp.float32)
+
+    for impl in ("blocked", "reference"):
+        out = ops.bitmm(words, x, impl=impl)
+        jax.block_until_ready(out)
+        us = timeit(lambda: jax.block_until_ready(
+            ops.bitmm(words, x, impl=impl)), repeats=3)
+        rows.append(Row(f"kern_bitmm_{impl}_n{n}", us,
+                        {"n": n, "b": b, "GF": 2 * n * n * b / 1e9}))
+
+    m = 1024 if quick else 4096
+    cdense = rng.random((m, m)) < 0.01
+    cw = jnp.asarray(np.asarray(packed.pack(jnp.asarray(cdense))))
+    for impl in ("blocked", "reference"):
+        out = ops.closure_step(cw, impl=impl)
+        jax.block_until_ready(out)
+        us = timeit(lambda: jax.block_until_ready(
+            ops.closure_step(cw, impl=impl)), repeats=3)
+        rows.append(Row(f"kern_closure_{impl}_n{m}", us, {"n": m}))
+
+    f, k, w = 4096, 4, 512
+    rows_in = jnp.asarray(rng.integers(0, 2**32, (f, k, w),
+                                       dtype=np.uint64).astype(np.uint32))
+    out = ops.intersect(rows_in, impl="reference")
+    jax.block_until_ready(out)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.intersect(rows_in, impl="reference")), repeats=3)
+    rows.append(Row(f"kern_intersect_f{f}_k{k}", us, {"f": f, "k": k}))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 6 — query time vs number of distinct labels (email-profile graph,
+fixed size, |L| ∈ {5, 10, 15, 20})."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+from repro.core.baselines import JMBudgetExceeded, TMTimeout, jm_match, tm_match
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1500 if quick else 50_000
+    rows: List[Row] = []
+    for n_labels in (5, 10, 15, 20):
+        graph = bench_graph(n=n, avg_degree=1.6, n_labels=n_labels,
+                            kind="powerlaw", seed=7)
+        gm = GM(graph, GMOptions(limit=100_000, materialize=False))
+        for q in bench_queries(graph, qtype="H", n=3 if quick else 6, seed=2):
+            us = timeit(lambda: gm.match(q), repeats=1)
+            rows.append(Row(f"fig6_GM_L{n_labels}_{q.name}", us,
+                            {"labels": n_labels}))
+            for name, fn, exc in (("JM", jm_match, JMBudgetExceeded),
+                                  ("TM", tm_match, TMTimeout)):
+                try:
+                    us = timeit(lambda: fn(graph, q, budget_rows=200_000),
+                                repeats=1)
+                    rows.append(Row(f"fig6_{name}_L{n_labels}_{q.name}", us,
+                                    {"labels": n_labels}))
+                except exc:
+                    rows.append(Row(f"fig6_{name}_L{n_labels}_{q.name}", -1,
+                                    {"labels": n_labels, "fail": 1}))
+    return rows

@@ -1,0 +1,25 @@
+"""Table 3 — search-ordering strategies: JO vs RI vs BJ on H-queries."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1500 if quick else 50_000
+    graph = bench_graph(n=n, avg_degree=3.0, n_labels=8, seed=13)
+    rows: List[Row] = []
+    for q in bench_queries(graph, qtype="H", n=5 if quick else 10, seed=14):
+        for strategy in ("jo", "ri", "bj"):
+            gm = GM(graph, GMOptions(limit=50_000, materialize=False,
+                                     ordering=strategy))
+            res = gm.match(q)
+            us = timeit(lambda: gm.match(q), repeats=1)
+            rows.append(Row(f"tab3_{strategy.upper()}_{q.name}", us,
+                            {"count": res.count, "order": "-".join(
+                                map(str, res.order))}))
+    return rows

@@ -1,0 +1,57 @@
+"""Fig. 4 / Fig. 5 / Table 2 — GM vs TM vs JM across H/C/D query sets.
+
+Reports per-query evaluation time for the three algorithms plus their
+failure modes (JM out-of-memory budget, TM tree-solution budget), matching
+the paper's solved/unsolved accounting.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+from repro.core.baselines import (JMBudgetExceeded, TMTimeout, jm_match,
+                                  tm_match)
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+LIMIT = 100_000          # result cap (paper uses 10^7; scaled for quick mode)
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1200 if quick else 20_000
+    budget = 200_000 if quick else 5_000_000
+    rows: List[Row] = []
+    for qtype in ("C", "H", "D"):
+        graph = bench_graph(n=n, avg_degree=2.5, n_labels=8, seed=3)
+        gm = GM(graph, GMOptions(limit=LIMIT, materialize=False))
+        queries = bench_queries(graph, qtype=qtype,
+                                n=6 if quick else 20, seed=1)
+        for q in queries:
+            res = gm.match(q)
+            us = timeit(lambda: gm.match(q), repeats=1)
+            rows.append(Row(f"fig4_GM_{qtype}_{q.name}", us,
+                            {"count": res.count, "rig": res.rig_nodes,
+                             "solved": 1}))
+            try:
+                jm = jm_match(graph, q, budget_rows=budget)
+                us = timeit(lambda: jm_match(graph, q, budget_rows=budget),
+                            repeats=1)
+                rows.append(Row(f"fig4_JM_{qtype}_{q.name}", us,
+                                {"count": jm.count, "solved": 1,
+                                 "max_inter": jm.max_intermediate}))
+            except JMBudgetExceeded:
+                rows.append(Row(f"fig4_JM_{qtype}_{q.name}", -1,
+                                {"solved": 0, "fail": "OOM"}))
+            try:
+                tm = tm_match(graph, q, budget_rows=budget)
+                us = timeit(lambda: tm_match(graph, q, budget_rows=budget),
+                            repeats=1)
+                rows.append(Row(f"fig4_TM_{qtype}_{q.name}", us,
+                                {"count": tm.count, "solved": 1,
+                                 "tree_sols": tm.tree_solutions}))
+            except TMTimeout:
+                rows.append(Row(f"fig4_TM_{qtype}_{q.name}", -1,
+                                {"solved": 0, "fail": "TO"}))
+    return rows

@@ -1,0 +1,38 @@
+"""Fig. 9 — RIG size, construction time and total query time for GM vs
+GM-S (no prefilter — the default GM here) vs GM-F (prefilter only, no
+double simulation).  RIG size reported as % of data-graph size."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1500 if quick else 75_000
+    graph = bench_graph(n=n, avg_degree=3.0, n_labels=8, seed=10)
+    gsize = graph.n + graph.n_edges
+    variants = {
+        "GM": GMOptions(limit=50_000, materialize=False),
+        "GM-S": GMOptions(limit=50_000, materialize=False,
+                          use_prefilter=False),
+        "GM-F": GMOptions(limit=50_000, materialize=False, sim_algo="none",
+                          use_prefilter=True),
+    }
+    rows: List[Row] = []
+    for q in bench_queries(graph, qtype="H", n=4 if quick else 12, seed=11):
+        for name, opt in variants.items():
+            gm = GM(graph, opt)
+            res = gm.match(q)
+            rig_size = res.rig_nodes + res.rig_edges
+            us = timeit(lambda: gm.match(q), repeats=1)
+            rows.append(Row(f"fig9_{name}_{q.name}", us, {
+                "rig_pct": round(100.0 * rig_size / gsize, 3),
+                "rig_nodes": res.rig_nodes,
+                "match_ms": round(res.matching_s * 1e3, 2),
+                "enum_ms": round(res.enumerate_s * 1e3, 2),
+                "count": res.count}))
+    return rows

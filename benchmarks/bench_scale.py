@@ -1,0 +1,35 @@
+"""Fig. 7 — scalability: query time on increasingly larger graph subsets
+(DBLP-profile), GM vs TM vs JM."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+from repro.core.baselines import JMBudgetExceeded, TMTimeout, jm_match, tm_match
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    sizes = (500, 1000, 2000, 4000) if quick else (20_000, 50_000, 100_000,
+                                                   300_000)
+    rows: List[Row] = []
+    for n in sizes:
+        graph = bench_graph(n=n, avg_degree=3.3, n_labels=20, kind="uniform",
+                            seed=11)
+        gm = GM(graph, GMOptions(limit=100_000, materialize=False))
+        for q in bench_queries(graph, qtype="H", n=2 if quick else 4, seed=4):
+            us = timeit(lambda: gm.match(q), repeats=1)
+            rows.append(Row(f"fig7_GM_n{n}_{q.name}", us, {"n": n}))
+            for name, fn, exc in (("JM", jm_match, JMBudgetExceeded),
+                                  ("TM", tm_match, TMTimeout)):
+                try:
+                    us = timeit(lambda: fn(graph, q, budget_rows=200_000),
+                                repeats=1)
+                    rows.append(Row(f"fig7_{name}_n{n}_{q.name}", us,
+                                    {"n": n}))
+                except exc:
+                    rows.append(Row(f"fig7_{name}_n{n}_{q.name}", -1,
+                                    {"n": n, "fail": 1}))
+    return rows

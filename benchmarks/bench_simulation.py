@@ -1,0 +1,29 @@
+"""Fig. 8(b) — double-simulation construction: Bas vs Dag vs DagMap
+(+ convergence pass counts)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.simulation import fb_sim, fb_sim_bas
+
+from .common import Row, bench_graph, bench_queries, timeit
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 2000 if quick else 20_000
+    graph = bench_graph(n=n, avg_degree=3.0, n_labels=8, seed=8)
+    rows: List[Row] = []
+    for q in bench_queries(graph, qtype="H", n=5 if quick else 12, seed=9):
+        variants = (
+            ("Bas", lambda: fb_sim_bas(graph, q)),
+            ("Dag", lambda: fb_sim(graph, q, use_change_flags=False)),
+            ("DagMap", lambda: fb_sim(graph, q, use_change_flags=True)),
+        )
+        for name, fn in variants:
+            res = fn()
+            us = timeit(fn, repeats=2)
+            rows.append(Row(f"fig8b_{name}_{q.name}", us,
+                            {"passes": res.passes, "checks": res.checks,
+                             "pruned": res.pruned}))
+    return rows

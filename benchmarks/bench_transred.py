@@ -1,0 +1,38 @@
+"""Fig. 10/11 — effect of pattern transitive reduction: GM vs GM-NR on
+D-queries constructed with redundant descendant edges."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import GM, GMOptions
+from repro.core.query import DESC, PatternQuery, QueryEdge
+from repro.data.queries import random_query_from_graph
+
+from .common import Row, bench_graph, timeit
+
+
+def _with_transitive_edges(q: PatternQuery) -> PatternQuery:
+    """Add the implied descendant edges back (full form) so reduction has
+    something to remove — mirrors Fig. 10's redundant D-queries."""
+    return q.full_form()
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1500 if quick else 50_000
+    graph = bench_graph(n=n, avg_degree=2.5, n_labels=8, seed=12)
+    rows: List[Row] = []
+    for i in range(4 if quick else 10):
+        base = random_query_from_graph(graph, 4 + i % 2, qtype="D",
+                                       seed=40 + i, extra_edge_prob=0.1)
+        q = _with_transitive_edges(base)
+        gm = GM(graph, GMOptions(limit=50_000, materialize=False))
+        gm_nr = GM(graph, GMOptions(limit=50_000, materialize=False,
+                                    use_transitive_reduction=False))
+        tr = q.transitive_reduction()
+        us = timeit(lambda: gm.match(q), repeats=1)
+        rows.append(Row(f"fig11_GM_{base.name}", us,
+                        {"edges": q.m, "tr_edges": tr.m}))
+        us = timeit(lambda: gm_nr.match(q), repeats=1)
+        rows.append(Row(f"fig11_GM-NR_{base.name}", us, {"edges": q.m}))
+    return rows

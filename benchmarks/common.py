@@ -1,0 +1,63 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Every bench module exposes ``run(quick: bool) -> list[Row]``; ``run.py``
+executes them all and prints ``name,us_per_call,derived`` CSV (one line per
+measured configuration), mirroring the paper's per-query reporting.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph, template_queries
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any] = field(default_factory=dict)
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.1f},{d}"
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+_GRAPH_CACHE: dict = {}
+
+
+def bench_graph(n=2000, avg_degree=3.0, n_labels=8, kind="powerlaw", seed=0):
+    key = (n, avg_degree, n_labels, kind, seed)
+    if key not in _GRAPH_CACHE:
+        g = random_labeled_graph(n, avg_degree=avg_degree, n_labels=n_labels,
+                                 kind=kind, seed=seed)
+        g.reachability()          # build the index once, like BFL in §7.1
+        g.adj_bits(), g.adj_bits_t()
+        _GRAPH_CACHE[key] = g
+    return _GRAPH_CACHE[key]
+
+
+def bench_queries(graph, qtype="H", n=8, seed=0):
+    """Mostly subgraph-sampled queries (guaranteed satisfiable, like the
+    paper's biology sets) plus a few label-randomized templates (these can
+    have empty answers — the paper's HQ19 case, caught early by the RIG)."""
+    qs = [random_query_from_graph(graph, 4 + i % 3, qtype=qtype,
+                                  seed=seed + 10 + i,
+                                  extra_edge_prob=0.4)
+          for i in range(max(n - 2, 1))]
+    qs += template_queries(graph, qtype=qtype, seed=seed)[:2]
+    return qs[:n]

@@ -1,0 +1,100 @@
+"""Roofline derivation from the dry-run manifest (§Roofline).
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  The dry-run records *per-device* quantities from the
+partitioned module (cost_analysis + the HLO collective census), so:
+
+    compute    = flops_per_device        / peak_flops
+    memory     = hbm_bytes_per_device    / hbm_bw
+    collective = wire_bytes_per_device   / link_bw
+
+(equivalently global/(chips·BW) — the global quantities are per-device ×
+chips).  The MODEL_FLOPS/HLO_FLOPs ratio flags remat/padding/dispatch waste.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--manifest results/dryrun.json]
+      [--csv results/roofline.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    wire_dev = rec.get("collective_wire_bytes_per_device", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    hlo_global = flops_dev * n_dev
+    model = rec.get("model_flops", 0.0)
+    useful = model / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model flops per second at the bound, vs peak
+    step_time = bound
+    mfu = model / (n_dev * PEAK_FLOPS * step_time) if step_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "devices": n_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": model,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu,
+        "hbm_args_GB_per_dev": rec["memory"]["argument_size_in_bytes"] / 1e9,
+        "hbm_temp_GB_per_dev": rec["memory"]["temp_size_in_bytes"] / 1e9,
+        "fits_16GB": (rec["memory"]["argument_size_in_bytes"]
+                      + rec["memory"]["temp_size_in_bytes"]
+                      + rec["memory"]["output_size_in_bytes"]) < 16e9,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--manifest", default="results/dryrun.json")
+    ap.add_argument("--csv", default="results/roofline.csv")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    with open(args.manifest) as f:
+        records = json.load(f)
+    rows = [analyze(r) for r in records if r.get("status") == "ok"
+            and (args.mesh is None or r["mesh"] == args.mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    hdr = (f"{'arch':<18}{'shape':<15}{'mesh':<9}{'compute':>10}{'memory':>10}"
+           f"{'collect':>10}  {'dominant':<11}{'useful':>7}{'roofl%':>8}"
+           f"{'fits':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<18}{r['shape']:<15}{r['mesh']:<9}"
+              f"{r['t_compute_s']:>10.2e}{r['t_memory_s']:>10.2e}"
+              f"{r['t_collective_s']:>10.2e}  {r['dominant']:<11}"
+              f"{r['useful_ratio']:>7.2f}{100 * r['roofline_fraction']:>7.1f}%"
+              f"{'  ok' if r['fits_16GB'] else ' OOM!':>6}")
+
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"\nwrote {args.csv} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

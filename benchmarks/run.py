@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = -1 marks a failure
+case: JM OOM / TM timeout, mirroring the paper's unsolved-query accounting).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8a,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_childcheck, bench_kernels, bench_labels, bench_ordering,
+               bench_queries, bench_rig, bench_scale, bench_simulation,
+               bench_transred)
+
+MODULES = {
+    "fig4_5_tab2_queries": bench_queries,
+    "fig6_labels": bench_labels,
+    "fig7_scale": bench_scale,
+    "fig8a_childcheck": bench_childcheck,
+    "fig8b_simulation": bench_simulation,
+    "fig9_rig": bench_rig,
+    "fig10_11_transred": bench_transred,
+    "tab3_ordering": bench_ordering,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow); default is quick mode")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys to run")
+    args = ap.parse_args()
+    keys = list(MODULES) if not args.only else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    for key in keys:
+        mod = MODULES[key]
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:   # a bench failure should not hide the rest
+            print(f"{key},-1,error={type(e).__name__}:{e}", flush=True)
+            continue
+        for r in rows:
+            print(r.csv(), flush=True)
+        print(f"# {key}: {len(rows)} rows in {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,601 @@
+"""Architecture config framework: one object per assigned architecture.
+
+Every arch exposes:
+
+* ``shapes``         — the assigned (shape_name → params) cells;
+* ``smoke_*``        — a REDUCED same-family config + one real forward/train
+                       step on CPU (used by tests/models/test_smoke.py);
+* ``build_dryrun``   — (step_fn, abstract inputs, in_shardings) for a given
+                       (shape, mesh): the allocation-free lowering unit of
+                       the multi-pod dry-run;
+* ``model_flops``    — the analytic MODEL_FLOPS for §Roofline
+                       (6·N·D dense / 6·N_active·D MoE; per-family formulas
+                       for GNN/recsys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist import sharding as shd
+from ..models import gnn as gnn_mod
+from ..models import recsys as din_mod
+from ..models import transformer as tf_mod
+from ..train import optimizer as opt_mod
+
+OPT = opt_mod.AdamWConfig()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _pad512(n: int) -> int:
+    """Pad a node/edge count up to a multiple of 512 so the leading dim
+    shards evenly on every production mesh (the real loaders pad batches
+    the same way; masks neutralize the padding)."""
+    return int(-(-n // 512) * 512)
+
+
+def _shardings(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclass
+class DryRunUnit:
+    """Everything jax.jit(...).lower(...) needs for one cell."""
+    name: str
+    step_fn: Callable
+    args: Tuple[Any, ...]              # abstract ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any = None
+    donate: Tuple[int, ...] = ()
+
+
+class ArchConfig:
+    arch_id: str = ""
+    family: str = ""
+    shapes: Dict[str, Dict[str, Any]] = {}
+
+    def build_dryrun(self, shape: str, mesh: Mesh) -> DryRunUnit:
+        raise NotImplementedError
+
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        """Run one reduced forward/train step; return metrics for asserts."""
+        raise NotImplementedError
+
+    def model_flops(self, shape: str) -> float:
+        raise NotImplementedError
+
+
+# ===================================================================== LM ===
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+class LMArch(ArchConfig):
+    family = "lm"
+    shapes = LM_SHAPES
+
+    def __init__(self, cfg: tf_mod.LMConfig):
+        self.cfg = cfg
+        self.arch_id = cfg.name
+
+    # ------------------------------------------------------------ smoke
+    def smoke_config(self) -> tf_mod.LMConfig:
+        c = self.cfg
+        return dataclasses.replace(
+            c, n_layers=2, d_model=64, n_heads=4, n_kv=max(1, min(c.n_kv, 2)),
+            d_ff=128, vocab=256, d_head=16,
+            n_experts=min(c.n_experts, 4), top_k=min(c.top_k, 2),
+            n_shared=min(c.n_shared, 1),
+            d_ff_expert=64 if c.n_experts else 0,
+            dtype=jnp.float32, pad_heads_to=0, pad_kv_to=0)
+
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        cfg = self.smoke_config()
+        params = tf_mod.init_params(cfg, jax.random.key(seed))
+        rng = np.random.default_rng(seed)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                       jnp.int32)}
+        loss, grads = jax.value_and_grad(tf_mod.loss_fn)(params, batch, cfg)
+        opt = opt_mod.init_state(params)
+        params2, opt2, m = opt_mod.apply_updates(params, grads, opt, OPT)
+        logits = tf_mod.forward(params, batch["tokens"], cfg)
+        # decode one step
+        cache = tf_mod.init_cache(cfg, 2, 32)
+        dec_logits, cache = tf_mod.decode_step(params, cache,
+                                               batch["tokens"][:, :1], cfg)
+        return {"loss": float(loss), "logits_shape": tuple(logits.shape),
+                "decode_shape": tuple(dec_logits.shape),
+                "grad_norm": float(m["grad_norm"]),
+                "finite": bool(jnp.isfinite(loss))
+                and all(bool(jnp.isfinite(g).all())
+                        for g in jax.tree.leaves(grads))}
+
+    # ----------------------------------------------------------- dry-run
+    def _mesh_cfg(self, mesh: Mesh) -> tf_mod.LMConfig:
+        tp = mesh.shape["model"]
+        c = self.cfg
+        hq = int(math.ceil(c.n_heads / tp) * tp)
+        hkv = c.n_kv
+        if hq % hkv:                     # keep GQA grouping integral
+            hkv = next(d for d in range(hkv, hq + 1) if hq % d == 0)
+        return dataclasses.replace(c, pad_heads_to=hq, pad_kv_to=hkv)
+
+    def build_dryrun(self, shape: str, mesh: Mesh, *,
+                     layers_override: Optional[int] = None,
+                     unroll: bool = False,
+                     variant: str = "baseline") -> DryRunUnit:
+        """``layers_override``+``unroll`` are the dry-run *calibration* mode:
+        HLO cost analysis counts a scan body once, so launch/dryrun.py lowers
+        unrolled L=2 and L=4 variants and extrapolates per-layer costs to the
+        true depth (exact — layers are homogeneous).
+
+        ``variant`` selects §Perf configurations:
+          * ``flash``           — chunked online-softmax attention
+          * ``flash+chunkloss`` — + streamed lm_head cross-entropy
+        """
+        sp = self.shapes[shape]
+        cfg = self._mesh_cfg(mesh)
+        if variant.startswith("flash"):
+            cfg = dataclasses.replace(cfg, flash_attention=True)
+        if "chunkloss" in variant:
+            cfg = dataclasses.replace(cfg, chunked_loss=True, loss_chunk=512)
+        if "wsc" in variant:
+            cfg = dataclasses.replace(
+                cfg, shard_activations=shd.batch_axes(mesh))
+        if layers_override is not None:
+            cfg = dataclasses.replace(cfg, n_layers=layers_override,
+                                      unroll=unroll)
+        pspecs = shd.lm_param_specs(cfg, mesh)
+        # kv projections: shard out-dim only when the padded kv head count
+        # divides the TP degree (else replicate — GQA kv is small)
+        tp = mesh.shape["model"]
+        if cfg.hkv % tp:
+            pspecs["layers"]["wk"] = P(None, "data", None)
+            pspecs["layers"]["wv"] = P(None, "data", None)
+            if cfg.qkv_bias:
+                pspecs["layers"]["bk"] = P(None, None)
+                pspecs["layers"]["bv"] = P(None, None)
+        params = tf_mod.abstract_params(cfg)
+        b = sp["global_batch"]
+
+        if sp["kind"] == "train":
+            opt_abs = {
+                "step": _sds((), jnp.int32),
+                "m": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+                "v": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+            }
+            opt_specs = {"step": P(),
+                         "m": pspecs, "v": pspecs}
+            batch = {"tokens": _sds((b, sp["seq_len"]), jnp.int32),
+                     "labels": _sds((b, sp["seq_len"]), jnp.int32)}
+            bspecs = shd.lm_batch_specs(mesh)
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(tf_mod.loss_fn)(
+                    params, batch, cfg)
+                params, opt_state, metrics = opt_mod.apply_updates(
+                    params, grads, opt_state, OPT)
+                return params, opt_state, loss
+
+            return DryRunUnit(
+                name=f"{self.arch_id}:{shape}", step_fn=train_step,
+                args=(params, opt_abs, batch),
+                in_shardings=(_shardings(mesh, pspecs),
+                              _shardings(mesh, opt_specs),
+                              _shardings(mesh, bspecs)),
+                donate=(0, 1))
+
+        if sp["kind"] == "prefill":
+            batch = {"tokens": _sds((b, sp["seq_len"]), jnp.int32)}
+            bspecs = {"tokens": P(shd.batch_axes(mesh), None)}
+
+            def prefill_step(params, batch):
+                logits = tf_mod.forward(params, batch["tokens"], cfg)
+                return logits[:, -1, :]        # serving returns last-token
+
+            return DryRunUnit(
+                name=f"{self.arch_id}:{shape}", step_fn=prefill_step,
+                args=(params, batch),
+                in_shardings=(_shardings(mesh, pspecs),
+                              _shardings(mesh, bspecs)))
+
+        # decode: one new token against a seq_len KV cache
+        cache = {
+            "k": _sds((cfg.n_layers, b, sp["seq_len"], cfg.hkv, cfg.head_dim),
+                      cfg.dtype),
+            "v": _sds((cfg.n_layers, b, sp["seq_len"], cfg.hkv, cfg.head_dim),
+                      cfg.dtype),
+            "length": _sds((), jnp.int32),
+        }
+        baxes = shd.batch_axes(mesh)
+        n_data = int(np.prod([mesh.shape[a] for a in baxes]))
+        kv_heads_ax = "model" if cfg.hkv % tp == 0 else None
+        if b % n_data == 0 and b >= n_data:
+            cspec = P(None, baxes, None if kv_heads_ax else "model",
+                      kv_heads_ax, None)
+        else:
+            # small-batch long-context: shard the KV sequence axis instead
+            cspec = P(None, None, baxes + (("model",) if not kv_heads_ax
+                                           else ()), kv_heads_ax, None)
+        cache_specs = {"k": cspec, "v": cspec, "length": P()}
+        tok_spec = {"tokens": P(baxes if b % n_data == 0 and b >= n_data
+                                else None, None)}
+        tokens = {"tokens": _sds((b, 1), jnp.int32)}
+
+        def decode(params, cache, batch):
+            logits, cache = tf_mod.decode_step(params, cache,
+                                               batch["tokens"], cfg)
+            return logits, cache
+
+        return DryRunUnit(
+            name=f"{self.arch_id}:{shape}", step_fn=decode,
+            args=(params, cache, tokens),
+            in_shardings=(_shardings(mesh, pspecs),
+                          _shardings(mesh, cache_specs),
+                          _shardings(mesh, tok_spec)),
+            donate=(1,))
+
+    def model_flops(self, shape: str) -> float:
+        sp = self.shapes[shape]
+        n_active = self.cfg.n_active_params()
+        if sp["kind"] == "train":
+            tokens = sp["seq_len"] * sp["global_batch"]
+            return 6.0 * n_active * tokens
+        if sp["kind"] == "prefill":
+            tokens = sp["seq_len"] * sp["global_batch"]
+            return 2.0 * n_active * tokens
+        # decode: one token per sequence + attention over the cache
+        c = self.cfg
+        attn = (2 * 2 * c.n_layers * sp["seq_len"] * c.n_kv * c.head_dim
+                * (c.n_heads // c.n_kv))
+        return sp["global_batch"] * (2.0 * n_active + attn)
+
+
+# ==================================================================== GNN ===
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433),
+    "minibatch_lg": dict(kind="train_sampled", n_nodes=232965,
+                         n_edges=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602),
+    "ogb_products": dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100),
+    "molecule": dict(kind="train_batched", n_nodes=30, n_edges=64, batch=128,
+                     d_feat=16),
+}
+
+
+class GNNArch(ArchConfig):
+    family = "gnn"
+    shapes = GNN_SHAPES
+
+    def __init__(self, cfg: gnn_mod.GNNConfig):
+        self.cfg = cfg
+        self.arch_id = cfg.name
+
+    def _shape_cfg(self, sp) -> gnn_mod.GNNConfig:
+        return dataclasses.replace(self.cfg, d_feat=sp["d_feat"])
+
+    def smoke_config(self) -> gnn_mod.GNNConfig:
+        return dataclasses.replace(self.cfg, n_layers=2, d_hidden=16,
+                                   d_feat=8, n_rbf=16, n_vars=6, n_classes=4)
+
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        from ..data import gnn_data
+        cfg = self.smoke_config()
+        params = gnn_mod.init_params(cfg, jax.random.key(seed))
+        if cfg.arch == "schnet":
+            batch = gnn_data.schnet_batch(10, 24, cfg.d_feat, batch=3,
+                                          seed=seed)
+        elif cfg.arch == "graphcast":
+            batch = gnn_data.graphcast_batch(24, 8, cfg.n_vars, 32, 24, 24,
+                                             seed=seed)
+        else:
+            batch = gnn_data.full_graph_batch(24, 60, cfg.d_feat,
+                                              cfg.n_classes, seed=seed)
+        batch = jax.tree.map(jnp.asarray, batch)
+        loss, grads = jax.value_and_grad(gnn_mod.loss_fn)(params, batch, cfg)
+        out = gnn_mod.forward(params, batch, cfg)
+        return {"loss": float(loss), "out_shape": tuple(np.shape(out)),
+                "finite": bool(jnp.isfinite(loss))
+                and all(bool(jnp.isfinite(g).all())
+                        for g in jax.tree.leaves(grads))}
+
+    def _abstract_batch(self, shape: str):
+        sp = self.shapes[shape]
+        cfg = self._shape_cfg(sp)
+        f32, i32 = jnp.float32, jnp.int32
+        if self.cfg.arch == "graphcast":
+            ng = sp.get("n_nodes", 1024)
+            if sp["kind"] == "train_batched":
+                ng = sp["n_nodes"] * sp["batch"]
+            ne = sp["n_edges"] * sp.get("batch", 1)
+            if sp["kind"] == "train_sampled":
+                ng, ne = 166_000, 166_000
+            ng, ne = _pad512(ng), _pad512(ne)
+            nm = _pad512(max(ng // 4, 512))
+            return {
+                "node_feat": _sds((ng, cfg.n_vars), f32),
+                "mesh_feat": _sds((nm, 3), f32),
+                "g2m_src": _sds((ne,), i32), "g2m_dst": _sds((ne,), i32),
+                "g2m_feat": _sds((ne, 4), f32),
+                "mesh_src": _sds((ne,), i32), "mesh_dst": _sds((ne,), i32),
+                "mesh_efeat": _sds((ne, 4), f32),
+                "m2g_src": _sds((ne,), i32), "m2g_dst": _sds((ne,), i32),
+                "m2g_feat": _sds((ne, 4), f32),
+                "node_mask": _sds((ng,), jnp.bool_),
+                "labels": _sds((ng, cfg.n_vars), f32),
+            }, cfg
+        if sp["kind"] == "train_batched":      # molecule
+            n = _pad512(sp["n_nodes"] * sp["batch"])
+            e = _pad512(sp["n_edges"] * sp["batch"])
+            batch = {
+                "node_feat": _sds((n, sp["d_feat"]), f32),
+                "edge_src": _sds((e,), i32), "edge_dst": _sds((e,), i32),
+                "node_mask": _sds((n,), jnp.bool_),
+                "graph_ids": _sds((n,), i32),
+            }
+            if self.cfg.arch == "schnet":
+                batch["edge_feat"] = _sds((e, 1), f32)
+                batch["graph_targets"] = _sds((sp["batch"],), f32)
+            else:
+                batch["graph_labels"] = _sds((sp["batch"],), i32)
+            return batch, cfg
+        if sp["kind"] == "train_sampled":
+            pad_nodes = _pad512(sp["batch_nodes"]
+                                * (1 + sp["fanout"][0]
+                                   + sp["fanout"][0] * sp["fanout"][1]))
+            pad_edges = pad_nodes
+            batch = {
+                "node_feat": _sds((pad_nodes, sp["d_feat"]), f32),
+                "edge_src": _sds((pad_edges,), i32),
+                "edge_dst": _sds((pad_edges,), i32),
+                "labels": _sds((pad_nodes,), i32),
+                "node_mask": _sds((pad_nodes,), jnp.bool_),
+                "train_mask": _sds((pad_nodes,), jnp.bool_),
+            }
+            if self.cfg.arch == "schnet":
+                batch["edge_feat"] = _sds((pad_edges, 1), f32)
+                batch.pop("labels")
+            return batch, cfg
+        # full graph
+        n, e = _pad512(sp["n_nodes"]), _pad512(sp["n_edges"])
+        batch = {
+            "node_feat": _sds((n, sp["d_feat"]), f32),
+            "edge_src": _sds((e,), i32), "edge_dst": _sds((e,), i32),
+            "labels": _sds((n,), i32),
+            "node_mask": _sds((n,), jnp.bool_),
+            "train_mask": _sds((n,), jnp.bool_),
+        }
+        if self.cfg.arch == "schnet":
+            batch["edge_feat"] = _sds((e, 1), f32)
+            batch.pop("labels")
+        return batch, cfg
+
+    def build_dryrun(self, shape: str, mesh: Mesh, *,
+                     variant: str = "baseline") -> DryRunUnit:
+        batch, cfg = self._abstract_batch(shape)
+        if variant == "shardmap" and cfg.arch in ("gin", "sage"):
+            return self._build_shardmap(shape, mesh, batch, cfg)
+        params = gnn_mod.abstract_params(cfg)
+        pspecs = shd.gnn_param_specs(cfg, mesh)
+        bspecs = shd.gnn_batch_specs(mesh, batch)
+        opt_abs = {
+            "step": _sds((), jnp.int32),
+            "m": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+        }
+        opt_specs = {"step": P(), "m": pspecs, "v": pspecs}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(gnn_mod.loss_fn)(
+                params, batch, cfg)
+            params, opt_state, _ = opt_mod.apply_updates(
+                params, grads, opt_state, OPT)
+            return params, opt_state, loss
+
+        return DryRunUnit(
+            name=f"{self.arch_id}:{shape}", step_fn=train_step,
+            args=(params, opt_abs, batch),
+            in_shardings=(_shardings(mesh, pspecs),
+                          _shardings(mesh, opt_specs),
+                          _shardings(mesh, bspecs)),
+            donate=(0, 1))
+
+    def _build_shardmap(self, shape: str, mesh: Mesh, batch, cfg) -> DryRunUnit:
+        """§Perf variant: explicit shard_map message passing with
+        dst-partitioned edges (see models.gnn_dist)."""
+        from ..models import gnn_dist
+        step, bspec_tree = gnn_dist.sharded_train_step(cfg, mesh, OPT)
+        batch = {k: v for k, v in batch.items() if k in bspec_tree}
+        params = gnn_mod.abstract_params(cfg)
+        pspecs = shd.gnn_param_specs(cfg, mesh)
+        opt_abs = {
+            "step": _sds((), jnp.int32),
+            "m": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+        }
+        opt_specs = {"step": P(), "m": pspecs, "v": pspecs}
+        bspecs = {k: bspec_tree[k] for k in batch}
+        return DryRunUnit(
+            name=f"{self.arch_id}:{shape}:shardmap", step_fn=step,
+            args=(params, opt_abs, batch),
+            in_shardings=(_shardings(mesh, pspecs),
+                          _shardings(mesh, opt_specs),
+                          _shardings(mesh, bspecs)),
+            donate=(0, 1))
+
+    def model_flops(self, shape: str) -> float:
+        batch, cfg = self._abstract_batch(shape)
+        d = cfg.d_hidden
+        if cfg.arch == "graphcast":
+            ne = batch["mesh_src"].shape[0]
+            ng = batch["node_feat"].shape[0]
+            per_edge = 2 * (2 * d + 4) * d + 2 * d * d
+            per_node = 2 * (2 * d) * d + 2 * d * d
+            fwd = cfg.n_layers * (ne * per_edge
+                                  + batch["mesh_feat"].shape[0] * per_node) \
+                + ng * 2 * cfg.n_vars * d * 2
+            return 3 * fwd
+        n = batch["node_feat"].shape[0]
+        e = batch["edge_src"].shape[0]
+        per_layer = n * (2 * d * d * 2) + e * d * 2
+        if cfg.arch == "schnet":
+            per_layer += e * (2 * cfg.n_rbf * d + 2 * d * d)
+        fwd = cfg.n_layers * per_layer \
+            + n * 2 * batch["node_feat"].shape[1] * d
+        return 3 * fwd                       # fwd + bwd ≈ 3x fwd
+
+
+# ================================================================= recsys ===
+DIN_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+class DINArch(ArchConfig):
+    family = "recsys"
+    shapes = DIN_SHAPES
+
+    def __init__(self, cfg: din_mod.DINConfig):
+        self.cfg = cfg
+        self.arch_id = cfg.name
+
+    def smoke_config(self) -> din_mod.DINConfig:
+        return dataclasses.replace(self.cfg, n_items=1000, n_cates=50,
+                                   seq_len=12, user_feat_vocab=40)
+
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        from ..data import recsys_data
+        cfg = self.smoke_config()
+        params = din_mod.init_params(cfg, jax.random.key(seed))
+        batch = jax.tree.map(jnp.asarray, recsys_data.din_batch(
+            8, cfg.seq_len, cfg.n_items, cfg.n_cates, cfg.n_user_feats,
+            cfg.user_feat_vocab, step=0, seed=seed))
+        loss, grads = jax.value_and_grad(din_mod.loss_fn)(params, batch, cfg)
+        rb = jax.tree.map(jnp.asarray, recsys_data.retrieval_batch(
+            cfg.seq_len, cfg.n_items, cfg.n_cates, cfg.n_user_feats,
+            cfg.user_feat_vocab, n_candidates=64, seed=seed))
+        scores = din_mod.retrieval_scores(params, rb, cfg)
+        return {"loss": float(loss), "scores_shape": tuple(scores.shape),
+                "finite": bool(jnp.isfinite(loss))
+                and bool(jnp.isfinite(scores).all())
+                and all(bool(jnp.isfinite(g).all())
+                        for g in jax.tree.leaves(grads))}
+
+    def _abstract_batch(self, shape: str):
+        sp = self.shapes[shape]
+        cfg = self.cfg
+        i32, f32 = jnp.int32, jnp.float32
+        if sp["kind"] == "retrieval":
+            c = sp["n_candidates"]
+            return {
+                "hist_items": _sds((1, cfg.seq_len), i32),
+                "hist_cates": _sds((1, cfg.seq_len), i32),
+                "hist_mask": _sds((1, cfg.seq_len), f32),
+                "user_feats": _sds((1, cfg.n_user_feats), i32),
+                "cand_items": _sds((c,), i32),
+                "cand_cates": _sds((c,), i32),
+            }
+        b = sp["batch"]
+        batch = {
+            "item_id": _sds((b,), i32), "cate_id": _sds((b,), i32),
+            "hist_items": _sds((b, cfg.seq_len), i32),
+            "hist_cates": _sds((b, cfg.seq_len), i32),
+            "hist_mask": _sds((b, cfg.seq_len), f32),
+            "user_feats": _sds((b, cfg.n_user_feats), i32),
+        }
+        if sp["kind"] == "train":
+            batch["label"] = _sds((b,), f32)
+        return batch
+
+    def build_dryrun(self, shape: str, mesh: Mesh) -> DryRunUnit:
+        sp = self.shapes[shape]
+        cfg = self.cfg
+        params = din_mod.abstract_params(cfg)
+        pspecs = shd.din_param_specs(cfg, mesh)
+        batch = self._abstract_batch(shape)
+        bspecs = shd.din_batch_specs(mesh, batch)
+        if sp["kind"] == "retrieval":
+            # candidates shard over the batch axes (10⁶ is not divisible by
+            # 512; 16/32-way splits evenly); the single user replicates
+            baxes = shd.batch_axes(mesh)
+            bspecs = {k: (P(baxes) if k.startswith("cand_")
+                          else P(*([None] * len(v.shape))))
+                      for k, v in batch.items()}
+
+            def retrieval(params, batch):
+                return din_mod.retrieval_scores(params, batch, cfg)
+
+            return DryRunUnit(
+                name=f"{self.arch_id}:{shape}", step_fn=retrieval,
+                args=(params, batch),
+                in_shardings=(_shardings(mesh, pspecs),
+                              _shardings(mesh, bspecs)))
+        if sp["kind"] == "serve":
+            def serve(params, batch):
+                return din_mod.forward(params, batch, cfg)
+            return DryRunUnit(
+                name=f"{self.arch_id}:{shape}", step_fn=serve,
+                args=(params, batch),
+                in_shardings=(_shardings(mesh, pspecs),
+                              _shardings(mesh, bspecs)))
+        opt_abs = {
+            "step": _sds((), jnp.int32),
+            "m": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params),
+        }
+        opt_specs = {"step": P(), "m": pspecs, "v": pspecs}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(din_mod.loss_fn)(
+                params, batch, cfg)
+            params, opt_state, _ = opt_mod.apply_updates(
+                params, grads, opt_state, OPT)
+            return params, opt_state, loss
+
+        return DryRunUnit(
+            name=f"{self.arch_id}:{shape}", step_fn=train_step,
+            args=(params, opt_abs, batch),
+            in_shardings=(_shardings(mesh, pspecs),
+                          _shardings(mesh, opt_specs),
+                          _shardings(mesh, bspecs)),
+            donate=(0, 1))
+
+    def model_flops(self, shape: str) -> float:
+        sp = self.shapes[shape]
+        cfg = self.cfg
+        d = cfg.embed_dim
+        pair = 2 * d
+        attn_in = 4 * pair
+        attn = attn_in * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1] \
+            + cfg.attn_mlp[1]
+        d_in = cfg.n_user_feats * d + 3 * pair
+        mlp = d_in * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1]
+        per_ex = 2 * (cfg.seq_len * attn + mlp)
+        if sp["kind"] == "retrieval":
+            return sp["n_candidates"] * per_ex
+        mult = 3 if sp["kind"] == "train" else 1
+        return mult * sp["batch"] * per_ex

@@ -1,0 +1,142 @@
+"""The paper's own workload as a first-class architecture: ``rig_gm``.
+
+Shapes (beyond the 40 assigned cells — these are the paper-technique cells):
+
+* serve_1m   — gm_serve_step: batch of 32 hybrid queries against a 2²⁰-node
+               packed graph (double simulation ×4 + RIG stats + candidate
+               compaction) on the full mesh;
+* serve_4m   — same with a 2²² graph (512 GB packed — 1 GB/chip, stresses
+               the memory term);
+* closure_256k — one distributed boolean-squaring round of the reachability
+               index build at 2¹⁸ nodes (compute-term stress; the production
+               closure build runs ~log₂(diameter) of these offline);
+* sim_pass_1m — a single isolated simulation pass (the §Perf iteration unit).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..jaxgm import distributed as dist
+from ..jaxgm.encoding import QueryTensor
+from ..kernels import packed
+from .base import ArchConfig, DryRunUnit, _sds
+
+MAX_Q, MAX_E = 8, 16
+
+
+def _qt_specs(batch: int):
+    i32 = jnp.int32
+    return QueryTensor(
+        labels=_sds((batch, MAX_Q), i32),
+        edge_src=_sds((batch, MAX_E), i32),
+        edge_dst=_sds((batch, MAX_E), i32),
+        edge_kind=_sds((batch, MAX_E), i32),
+        n_nodes=_sds((batch,), i32),
+        n_edges=_sds((batch,), i32),
+    )
+
+
+class PatternArch(ArchConfig):
+    family = "pattern"
+    arch_id = "rig_gm"
+    shapes = {
+        "serve_1m": dict(kind="serve", n_pad=1 << 20, batch=32, passes=4),
+        "serve_4m": dict(kind="serve", n_pad=1 << 22, batch=32, passes=4),
+        "closure_256k": dict(kind="closure", n_pad=1 << 18),
+        "sim_pass_1m": dict(kind="sim", n_pad=1 << 20, batch=32),
+    }
+
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        # the jaxgm test-suite covers this path exhaustively; the smoke here
+        # just runs the full pipeline on a tiny graph
+        from ..data.graphs import random_labeled_graph
+        from ..data.queries import random_query_from_graph
+        from ..jaxgm import JaxGM
+        from ..core import match
+        g = random_labeled_graph(60, avg_degree=2.2, n_labels=4, seed=seed)
+        q = random_query_from_graph(g, 4, qtype="H", seed=seed + 1)
+        jgm = JaxGM(g, block=128, capacity=4096, exact_sim=True,
+                    impl="reference")
+        dev = jgm.match(q)
+        host = match(g, q, limit=None)
+        return {"count": dev.count, "host_count": host.count,
+                "finite": dev.count == host.count and not dev.overflowed}
+
+    def build_dryrun(self, shape: str, mesh: Mesh, *,
+                     variant: str = "baseline",
+                     unroll: bool = False) -> DryRunUnit:
+        """variants (§Perf): ``packy`` — bit-pack Y before its all-gather;
+        ``b128`` — 4× query batch (amortizes matrix reads per query);
+        ``bk1024`` — smaller unpack chunks; ``best`` — packy+b128.
+
+        ``unroll=False`` (default) is the deployable artifact: the blocked
+        matmul scans its chunks, so XLA reuses one chunk's unpack buffers
+        (§Perf H9 — the unrolled form peaks at 39-105 GB of live unpack
+        temporaries).  ``unroll=True`` is the cost-calibration lowering
+        (HLO cost analysis counts scan bodies once)."""
+        sp = dict(self.shapes[shape])
+        if variant in ("b128", "best"):
+            sp["batch"] = 128
+        pack_y = variant in ("packy", "best")
+        block_k = 1024 if variant in ("bk1024", "best") else 4096
+        n_pad = sp["n_pad"]
+        w = n_pad // 32
+        row_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        if sp["kind"] == "closure":
+            # one distributed squaring round R' = R | (R·R > 0), packed in/out.
+            # XLA auto-partitions the (N, N) boolean intermediate.
+            r = _sds((n_pad, w), jnp.uint32)
+            rspec = NamedSharding(mesh, P(row_axes, "model"))
+
+            def closure_round(r_words):
+                dense = packed.unpack(r_words, n_pad)
+                sq = (dense.astype(jnp.bfloat16) @ dense.astype(jnp.bfloat16)
+                      ).astype(jnp.float32) > 0
+                return packed.pack(sq | dense)
+
+            return DryRunUnit(name=f"{self.arch_id}:{shape}",
+                              step_fn=closure_round, args=(r,),
+                              in_shardings=(rspec,))
+
+        specs = dist.graph_specs(n_pad, mesh)
+        qts = _qt_specs(sp["batch"])
+        qt_shardings = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), qts)
+
+        if sp["kind"] == "sim":
+            def sim_pass(mats, labels, qts):
+                return dist.sharded_double_simulation(
+                    mats, labels, qts, mesh, n_passes=1, unroll=unroll,
+                    pack_y=pack_y, block_k=block_k)
+        else:
+            def sim_pass(mats, labels, qts):
+                return dist.gm_serve_step(mats, labels, qts, mesh,
+                                          n_passes=sp["passes"], top_k=4096,
+                                          unroll=unroll, pack_y=pack_y,
+                                          block_k=block_k)
+
+        return DryRunUnit(
+            name=f"{self.arch_id}:{shape}", step_fn=sim_pass,
+            args=(specs.mats, specs.labels, qts),
+            in_shardings=(specs.mats_sharding, specs.labels_sharding,
+                          qt_shardings))
+
+    def model_flops(self, shape: str) -> float:
+        sp = self.shapes[shape]
+        n = sp["n_pad"]
+        if sp["kind"] == "closure":
+            return 2.0 * n * n * n
+        passes = sp.get("passes", 1)
+        b = sp["batch"]
+        # 4 boolean matmuls (N × N × B·max_q) per pass (+1 stats pass)
+        per_pass = 4 * 2.0 * n * n * (b * MAX_Q)
+        extra = 2 * 2.0 * n * n * (b * MAX_Q) if sp["kind"] == "serve" else 0
+        return passes * per_pass + extra

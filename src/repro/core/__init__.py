@@ -1,0 +1,21 @@
+# The paper's primary contribution — the host-faithful implementation of the
+# RIG-based graph pattern matching system (GM): data graph + reachability
+# substrate, transitive reduction, double simulation, RIG construction,
+# search ordering and the MJoin worst-case-optimal enumerator, plus the JM
+# and TM baselines the paper compares against.  The TPU-adapted twin lives
+# in ``repro.jaxgm``.
+from .graph import DataGraph, graph_from_edge_list, paper_example_graph
+from .matcher import GM, GMOptions, MatchResult, match
+from .mjoin import mjoin
+from .ordering import get_order
+from .query import CHILD, DESC, PatternQuery, QueryEdge, paper_example_query, query
+from .rig import RIG, build_rig, prefilter
+from .simulation import EdgeOracle, fb_sim, fb_sim_bas, fb_sim_dag, match_sets
+
+__all__ = [
+    "DataGraph", "graph_from_edge_list", "paper_example_graph",
+    "PatternQuery", "QueryEdge", "CHILD", "DESC", "query", "paper_example_query",
+    "EdgeOracle", "fb_sim", "fb_sim_bas", "fb_sim_dag", "match_sets",
+    "RIG", "build_rig", "prefilter", "get_order", "mjoin",
+    "GM", "GMOptions", "MatchResult", "match",
+]

@@ -1,0 +1,4 @@
+from .jm import JMBudgetExceeded, jm_match
+from .tm import TMTimeout, tm_match
+
+__all__ = ["jm_match", "tm_match", "JMBudgetExceeded", "TMTimeout"]

@@ -1,0 +1,101 @@
+"""Brute-force homomorphism oracle — test reference only.
+
+Independent of the production code paths: reachability comes from networkx
+``descendants`` (memoized) and candidate sets from raw label scans; the
+enumeration is plain nested backtracking over match sets with per-edge
+checks.  Exponential; use on graphs of at most a few hundred nodes.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import List, Optional, Set, Tuple
+
+import networkx as nx
+import numpy as np
+
+from .graph import DataGraph
+from .query import CHILD, PatternQuery
+
+
+def brute_force_answers(graph: DataGraph, q: PatternQuery,
+                        limit: Optional[int] = None) -> np.ndarray:
+    """All occurrence tuples of q on graph, shape (k, q.n), query-node order."""
+    g = nx.DiGraph()
+    g.add_nodes_from(range(graph.n))
+    g.add_edges_from(map(tuple, graph.edges))
+
+    # u ≺ v: a path of length >= 1 from u to v; hence u ≺ u iff u lies on a
+    # cycle (nx.descendants never includes the source, so patch that case
+    # via SCCs — required for IR2 transitivity soundness).
+    on_cycle = set()
+    for scc in nx.strongly_connected_components(g):
+        if len(scc) > 1:
+            on_cycle |= scc
+    on_cycle |= {u for u in g.nodes if g.has_edge(u, u)}
+
+    @lru_cache(maxsize=None)
+    def desc(u: int) -> frozenset:
+        d = set(nx.descendants(g, u))
+        if u in on_cycle:
+            d.add(u)
+        return frozenset(d)
+
+    def reaches(u: int, v: int) -> bool:
+        return v in desc(u)
+
+    cands: List[np.ndarray] = [graph.inverted_list(l) for l in q.labels]
+    if any(len(c) == 0 for c in cands):
+        return np.empty((0, q.n), dtype=np.int64)
+
+    # order query nodes so each (after the first) touches an earlier one
+    order = [0]
+    rest = set(range(1, q.n))
+    while rest:
+        nxt = next((r for r in sorted(rest)
+                    if any(s in order for s in q.neighbors(r))), None)
+        if nxt is None:
+            nxt = min(rest)
+        order.append(nxt)
+        rest.discard(nxt)
+
+    edge_checks: List[List[Tuple[int, int, bool]]] = [[] for _ in range(q.n)]
+    pos = {qi: i for i, qi in enumerate(order)}
+    for e in q.edges:
+        later = max(pos[e.src], pos[e.dst])
+        edge_checks[later].append((e.src, e.dst, e.kind == CHILD))
+
+    out: List[List[int]] = []
+    assign = [-1] * q.n
+
+    def ok(level: int) -> bool:
+        for (s, d, is_child) in edge_checks[level]:
+            u, v = assign[s], assign[d]
+            if is_child:
+                if not g.has_edge(u, v):
+                    return False
+            else:
+                if not reaches(u, v):
+                    return False
+        return True
+
+    def rec(level: int) -> bool:
+        if level == q.n:
+            out.append(list(assign))
+            return not (limit is not None and len(out) >= limit)
+        qi = order[level]
+        for v in cands[qi]:
+            assign[qi] = int(v)
+            if ok(level) and not rec(level + 1):
+                return False
+        assign[qi] = -1
+        return True
+
+    rec(0)
+    if not out:
+        return np.empty((0, q.n), dtype=np.int64)
+    return np.array(out, dtype=np.int64)
+
+
+def answer_set(tuples: np.ndarray) -> Set[tuple]:
+    return set(map(tuple, np.asarray(tuples, dtype=np.int64)))

@@ -1,0 +1,126 @@
+"""MJoin — multiway intersection-based occurrence enumeration (Alg. 5, §6).
+
+Backtracking over a search order; at recursion level *i* the candidate set
+for query node q_i is the intersection of
+
+* ``cos(q_i)`` (the RIG node set), and
+* one RIG adjacency row per already-bound neighbour of q_i,
+
+realized as packed-bitset ANDs — a true multiway join with no binary-join
+intermediate results.  Worst-case optimal (Thm. 2/3: runtime within the AGM
+bound of the RIG edge relations; space O(n · MaxNq)).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from . import bitset
+from .rig import RIG
+
+DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
+
+
+@dataclass
+class MJoinStats:
+    results: int = 0
+    expanded: int = 0            # partial assignments explored
+    intersections: int = 0
+    truncated: bool = False      # hit the result limit
+    enumerate_s: float = 0.0
+
+
+@dataclass
+class MJoinResult:
+    count: int
+    tuples: Optional[np.ndarray]     # (k, n_query) int64, in *query-node* order
+    stats: MJoinStats
+    order: List[int]
+
+
+def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
+          materialize: bool = True, max_tuples: int = 1_000_000) -> MJoinResult:
+    """Enumerate (or count) the occurrences encoded by ``rig``.
+
+    ``limit`` bounds the number of results visited (None = exhaustive);
+    ``max_tuples`` bounds materialization only (counting continues).
+    """
+    q = rig.query
+    n = q.n
+    t0 = time.perf_counter()
+    stats = MJoinStats()
+
+    if rig.is_empty():
+        return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
+                           else None, stats, order)
+
+    pos = {qi: i for i, qi in enumerate(order)}
+    # constraints[i]: list of (prefix_position, edge_index, is_forward)
+    #   is_forward=True  => edge (order[j] -> order[i]): row = rig.fwd[e][t_j]
+    #   is_forward=False => edge (order[i] -> order[j]): row = rig.bwd[e][t_j]
+    constraints: List[List[tuple]] = [[] for _ in range(n)]
+    for ei, e in enumerate(q.edges):
+        ps, pd = pos[e.src], pos[e.dst]
+        if ps < pd:
+            constraints[pd].append((ps, ei, True))
+        else:
+            constraints[ps].append((pd, ei, False))
+
+    nW = bitset.n_words(rig.n_graph)
+    t = np.full(n, -1, dtype=np.int64)           # assignment in *order* positions
+    cand_lists: List[np.ndarray] = [np.empty(0, np.int64)] * n
+    cursors = np.zeros(n, dtype=np.int64)
+    out: List[np.ndarray] = []
+    count = 0
+
+    def candidates(i: int) -> np.ndarray:
+        qi = order[i]
+        acc = rig.cos[qi]
+        for (j, ei, isf) in constraints[i]:
+            adj = rig.fwd[ei] if isf else rig.bwd[ei]
+            row = adj.get(int(t[j]))
+            if row is None:
+                return np.empty(0, dtype=np.int64)
+            acc = acc & row
+            stats.intersections += 1
+            if not acc.any():
+                return np.empty(0, dtype=np.int64)
+        return bitset.to_indices(acc, rig.n_graph)
+
+    i = 0
+    cand_lists[0] = candidates(0)
+    cursors[0] = 0
+    while i >= 0:
+        if limit is not None and count >= limit:
+            stats.truncated = True
+            break
+        lst = cand_lists[i]
+        c = cursors[i]
+        if c >= len(lst):
+            i -= 1
+            if i >= 0:
+                cursors[i] += 1
+            continue
+        t[i] = lst[c]
+        stats.expanded += 1
+        if i == n - 1:
+            count += 1
+            if materialize and len(out) < max_tuples:
+                tup = np.empty(n, dtype=np.int64)
+                tup[np.array(order)] = t          # back to query-node order
+                out.append(tup)
+            cursors[i] += 1
+            continue
+        i += 1
+        cand_lists[i] = candidates(i)
+        cursors[i] = 0
+
+    stats.results = count
+    stats.enumerate_s = time.perf_counter() - t0
+    tuples = (np.stack(out) if out else np.empty((0, n), dtype=np.int64)) \
+        if materialize else None
+    return MJoinResult(count=count, tuples=tuples, stats=stats, order=order)

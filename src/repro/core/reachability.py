@@ -1,0 +1,339 @@
+"""Node-reachability substrate (Def. 3.2 and §5.5).
+
+The paper plugs in *any* reachability labeling scheme; its experiments use
+BFL (Bloom Filter Labeling [39]) plus plain adjacency for child edges.  We
+provide three interchangeable components:
+
+``ReachabilityIndex``
+    SCC condensation + packed-bit transitive closure over the condensation
+    DAG.  Exact, O(n·E/64) time, n²/64 bytes.  This powers the *bitset batch*
+    operations (matvec-style existence checks and adjacency-row intersection)
+    that the device path accelerates with the ``bitmm`` kernel.
+
+``IntervalLabels``
+    DFS (begin, end) intervals on a DAG — used for the paper's *early
+    expansion termination* (§5.5): within a DAG, ``u`` cannot reach ``v``
+    whenever ``u.end < v.begin``.
+
+``BFL``
+    A faithful-in-spirit Bloom Filter Labeling: per-node k-bit bloom
+    summaries of the reachable set, computed bottom-up over the condensation
+    DAG, used as a *negative* filter in front of a guided DFS.  Probe-style
+    API (``reaches(u, v)``) like the original; no false negatives.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from . import bitset
+from .graph import DataGraph
+
+
+# --------------------------------------------------------------------------- SCC
+def strongly_connected_components(graph: DataGraph):
+    """Iterative Tarjan.  Returns (comp_id per node, n_comps).
+
+    Component ids are numbered in *reverse topological order of the
+    condensation* (i.e. comp(u) >= comp(v) whenever u can reach v in distinct
+    components gets comp(u) > comp(v) after the flip below we instead
+    guarantee topological order: comp(u) < comp(v) => u cannot be reached
+    from v).  We post-process to a forward topological numbering.
+    """
+    n = graph.n
+    index = np.full(n, -1, dtype=np.int64)
+    low = np.zeros(n, dtype=np.int64)
+    on_stack = np.zeros(n, dtype=bool)
+    comp = np.full(n, -1, dtype=np.int64)
+    stack: list[int] = []
+    next_index = 0
+    n_comps = 0
+
+    indptr, indices = graph.fwd_indptr, graph.fwd_indices
+
+    for root in range(n):
+        if index[root] != -1:
+            continue
+        # each frame: (node, next child pointer)
+        work = [(root, indptr[root])]
+        index[root] = low[root] = next_index
+        next_index += 1
+        stack.append(root)
+        on_stack[root] = True
+        while work:
+            v, ptr = work[-1]
+            if ptr < indptr[v + 1]:
+                work[-1] = (v, ptr + 1)
+                w = indices[ptr]
+                if index[w] == -1:
+                    index[w] = low[w] = next_index
+                    next_index += 1
+                    stack.append(int(w))
+                    on_stack[w] = True
+                    work.append((int(w), indptr[w]))
+                elif on_stack[w]:
+                    low[v] = min(low[v], index[w])
+            else:
+                work.pop()
+                if work:
+                    pv = work[-1][0]
+                    low[pv] = min(low[pv], low[v])
+                if low[v] == index[v]:
+                    while True:
+                        w = stack.pop()
+                        on_stack[w] = False
+                        comp[w] = n_comps
+                        if w == v:
+                            break
+                    n_comps += 1
+    # Tarjan emits components in reverse topological order -> flip.
+    comp = (n_comps - 1) - comp
+    return comp, n_comps
+
+
+# ------------------------------------------------------------------- closure
+@dataclass
+class ReachabilityIndex:
+    """Exact reachability via condensation + packed closure.
+
+    ``reach_bits`` is a packed bit matrix (n, W): row u = set of nodes v with
+    u ≺ v (strict per Def. 3.2 — v reachable by a path of length >= 1; a node
+    reaches itself only if it lies on a cycle).
+    """
+
+    n: int
+    comp: np.ndarray              # (n,) component id, topologically numbered
+    reach_bits: np.ndarray        # (n, W) packed, node-level closure
+    reach_bits_t: Optional[np.ndarray] = None   # transpose, built lazily
+
+    @staticmethod
+    def build(graph: DataGraph) -> "ReachabilityIndex":
+        n = graph.n
+        comp, n_comps = strongly_connected_components(graph)
+
+        # --- condensation DAG edges + member lists
+        members: list[list[int]] = [[] for _ in range(n_comps)]
+        for v in range(n):
+            members[comp[v]].append(v)
+
+        W = bitset.n_words(n)
+        # creach[c] = packed set of *data nodes* reachable from component c,
+        # including c's own members iff |c| > 1 (cycle) — strictness handled
+        # at node level below.
+        creach = np.zeros((n_comps, W), dtype=np.uint64)
+        csucc: list[set] = [set() for _ in range(n_comps)]
+        if graph.n_edges:
+            cs = comp[graph.edges[:, 0]]
+            cd = comp[graph.edges[:, 1]]
+            for a, b in zip(cs, cd):
+                if a != b:
+                    csucc[a].add(int(b))
+
+        # members packed per component
+        cmembers = np.zeros((n_comps, W), dtype=np.uint64)
+        for c in range(n_comps):
+            cmembers[c] = bitset.from_indices(np.array(members[c]), n)
+
+        # reverse topological order = descending component id
+        for c in range(n_comps - 1, -1, -1):
+            acc = np.zeros(W, dtype=np.uint64)
+            for s in csucc[c]:
+                acc |= creach[s] | cmembers[s]
+            if len(members[c]) > 1:
+                acc |= cmembers[c]
+            else:
+                # single-node component: self-reachable iff self loop
+                v = members[c][0]
+                if graph.has_edge(v, v):
+                    acc |= cmembers[c]
+            creach[c] = acc
+
+        reach = creach[comp]  # (n, W): every node inherits its component row
+        return ReachabilityIndex(n=n, comp=comp, reach_bits=reach)
+
+    # ------------------------------------------------------------- interface
+    def reaches(self, u: int, v: int) -> bool:
+        """u ≺ v (Def. 3.2)."""
+        return bitset.get(self.reach_bits[u], v)
+
+    def reach_row(self, u: int) -> np.ndarray:
+        """Packed descendant set of u."""
+        return self.reach_bits[u]
+
+    def bits_t(self) -> np.ndarray:
+        """Packed *ancestor* rows (transpose), built lazily and cached."""
+        if self.reach_bits_t is None:
+            dense = bitset.unpack(self.reach_bits, self.n)
+            self.reach_bits_t = bitset.pack(dense.T)
+        return self.reach_bits_t
+
+    def dense(self) -> np.ndarray:
+        return bitset.unpack(self.reach_bits, self.n)
+
+
+# ------------------------------------------------------------ interval labels
+@dataclass
+class IntervalLabels:
+    """DFS (begin, end) intervals on a DAG (paper §5.5, early termination).
+
+    Guarantee used: if ``end[u] < begin[v]`` then u does not reach v.
+    (The converse does not hold — it is a pruning filter only.)
+    """
+
+    begin: np.ndarray
+    end: np.ndarray
+
+    @staticmethod
+    def build(graph: DataGraph) -> "IntervalLabels":
+        n = graph.n
+        begin = np.full(n, -1, dtype=np.int64)
+        end = np.full(n, -1, dtype=np.int64)
+        clock = 0
+        indptr, indices = graph.fwd_indptr, graph.fwd_indices
+        roots = [v for v in range(n) if graph.bwd_indptr[v] == graph.bwd_indptr[v + 1]]
+        visited = np.zeros(n, dtype=bool)
+        for root in (roots + list(range(n))):
+            if visited[root]:
+                continue
+            stack = [(int(root), int(indptr[root]))]
+            visited[root] = True
+            begin[root] = clock
+            clock += 1
+            while stack:
+                v, ptr = stack[-1]
+                if ptr < indptr[v + 1]:
+                    stack[-1] = (v, ptr + 1)
+                    w = int(indices[ptr])
+                    if not visited[w]:
+                        visited[w] = True
+                        begin[w] = clock
+                        clock += 1
+                        stack.append((w, int(indptr[w])))
+                else:
+                    stack.pop()
+                    end[v] = clock
+                    clock += 1
+        # propagate: end must cover all descendants even via cross edges.
+        # One reverse-topological max-fold makes the filter exact on DAGs.
+        order = np.argsort(begin)  # begin times are a valid DFS order
+        for v in order[::-1]:
+            ch = indices[indptr[v]:indptr[v + 1]]
+            if len(ch):
+                end[v] = max(int(end[v]), int(end[ch].max()))
+        return IntervalLabels(begin=begin, end=end)
+
+    def cannot_reach(self, u: int, v: int) -> bool:
+        return bool(self.end[u] < self.begin[v])
+
+
+# ----------------------------------------------------------------------- BFL
+@dataclass
+class BFL:
+    """Bloom Filter Labeling (Su et al. [39]) — probe-style reachability.
+
+    Each node gets a k-bit bloom summary ``Lout`` of its reachable set (and
+    ``Lin`` of its ancestor set), computed bottom-up (top-down) over the
+    condensation.  ``reaches`` first applies the two bloom *negative* filters
+    and a topological-order filter, then falls back to a bloom-guided DFS.
+    Exact (no false negatives by construction; DFS resolves false positives).
+    """
+
+    n: int
+    bits: int
+    comp: np.ndarray
+    hash_: np.ndarray          # (n,) node hash in [0, bits)
+    lout: np.ndarray           # (n, bits/64) packed bloom of descendants
+    lin: np.ndarray            # (n, bits/64) packed bloom of ancestors
+    topo: np.ndarray           # (n,) topological rank of the node's component
+    graph: DataGraph
+
+    stats_probes: int = 0
+    stats_dfs: int = 0
+
+    @staticmethod
+    def build(graph: DataGraph, bits: int = 256, seed: int = 0) -> "BFL":
+        n = graph.n
+        comp, n_comps = strongly_connected_components(graph)
+        rng = np.random.default_rng(seed)
+        hash_ = rng.integers(0, bits, size=n, dtype=np.int64)
+        W = bits // 64
+        assert bits % 64 == 0
+
+        self_bloom = np.zeros((n, W), dtype=np.uint64)
+        np.bitwise_or.at(
+            self_bloom, (np.arange(n), hash_ >> 6),
+            np.uint64(1) << (hash_ & 63).astype(np.uint64))
+
+        # component-level aggregation
+        cbloom_out = np.zeros((n_comps, W), dtype=np.uint64)
+        cbloom_in = np.zeros((n_comps, W), dtype=np.uint64)
+        for v in range(n):
+            cbloom_out[comp[v]] |= self_bloom[v]
+            cbloom_in[comp[v]] |= self_bloom[v]
+        csucc: list[set] = [set() for _ in range(n_comps)]
+        cpred: list[set] = [set() for _ in range(n_comps)]
+        if graph.n_edges:
+            for a, b in zip(comp[graph.edges[:, 0]], comp[graph.edges[:, 1]]):
+                if a != b:
+                    csucc[int(a)].add(int(b))
+                    cpred[int(b)].add(int(a))
+        for c in range(n_comps - 1, -1, -1):
+            for s in csucc[c]:
+                cbloom_out[c] |= cbloom_out[s]
+        for c in range(n_comps):
+            for p in cpred[c]:
+                cbloom_in[c] |= cbloom_in[p]
+
+        return BFL(n=n, bits=bits, comp=comp, hash_=hash_,
+                   lout=cbloom_out[comp], lin=cbloom_in[comp],
+                   topo=comp.astype(np.int64), graph=graph)
+
+    def _bloom_neg(self, u: int, v: int) -> bool:
+        """True => definitely NOT reachable."""
+        hv = self.hash_[v]
+        if not (self.lout[u, hv >> 6] >> np.uint64(hv & 63)) & np.uint64(1):
+            return True
+        hu = self.hash_[u]
+        if not (self.lin[v, hu >> 6] >> np.uint64(hu & 63)) & np.uint64(1):
+            return True
+        return False
+
+    def reaches(self, u: int, v: int) -> bool:
+        self.stats_probes += 1
+        cu, cv = self.comp[u], self.comp[v]
+        if cu == cv:
+            # same SCC: reachable iff the SCC is non-trivial or self-loop
+            if u == v:
+                return self.graph.has_edge(u, u) or _scc_nontrivial(self.comp, cu)
+            return _scc_nontrivial(self.comp, cu)
+        if self.topo[u] > self.topo[v]:   # topological filter
+            return False
+        if self._bloom_neg(u, v):
+            return False
+        # bloom-guided DFS over the data graph
+        self.stats_dfs += 1
+        seen = set([u])
+        stack = [u]
+        while stack:
+            x = stack.pop()
+            for w in self.graph.children(int(x)):
+                w = int(w)
+                if w == v:
+                    return True
+                if w in seen:
+                    continue
+                if self.topo[w] > self.topo[v]:
+                    continue
+                if self._bloom_neg(w, v):
+                    continue
+                seen.add(w)
+                stack.append(w)
+        return False
+
+
+def _scc_nontrivial(comp: np.ndarray, c: int) -> bool:
+    # an SCC is non-trivial iff it has >= 2 members
+    return int((comp == c).sum()) >= 2

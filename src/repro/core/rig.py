@@ -1,0 +1,188 @@
+"""Runtime Index Graph (Def. 5.1) and BuildRIG (Alg. 4, §5.5).
+
+A RIG of query Q over graph G is a k-partite graph: one independent node set
+``cos(q)`` per query node with ``os(q) ⊆ cos(q) ⊆ ms(q)``, and, per query
+edge (p, q), exactly the query-edge occurrences between surviving candidates.
+It losslessly encodes all homomorphisms from Q to G (Prop. 5.1) and is built
+on-the-fly per query — never persisted.
+
+BuildRIG = *node selection* (double simulation — existence semantics)
+followed by *node expansion* (materialize adjacency — all-matches semantics).
+During expansion the outgoing/incoming edges of every candidate are indexed
+by query edge, enabling the multiway adjacency-list intersections of MJoin.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Literal, Optional
+
+import numpy as np
+
+from . import bitset
+from .graph import DataGraph
+from .query import CHILD, DESC, PatternQuery
+from .reachability import IntervalLabels
+from .simulation import (EdgeOracle, SimResult, fb_sim, fb_sim_bas,
+                         match_sets)
+
+SimAlgo = Literal["bas", "dag", "dagmap", "none"]
+
+
+@dataclass
+class RIG:
+    """Materialized runtime index graph.
+
+    ``fwd[e][v]`` / ``bwd[e][u]`` are packed bitsets: the RIG adjacency of a
+    candidate w.r.t. query edge index ``e`` — already restricted to the
+    candidate sets of both endpoints, so MJoin candidate generation is a pure
+    multiway AND of these rows (plus ``cos``).
+    """
+
+    query: PatternQuery
+    n_graph: int
+    cos: List[np.ndarray]                    # packed candidate sets per q-node
+    fwd: List[Dict[int, np.ndarray]]         # per edge: src candidate -> row
+    bwd: List[Dict[int, np.ndarray]]         # per edge: dst candidate -> row
+    sim: Optional[SimResult] = None
+    build_select_s: float = 0.0
+    build_expand_s: float = 0.0
+
+    def cos_indices(self, q: int) -> np.ndarray:
+        return bitset.to_indices(self.cos[q], self.n_graph)
+
+    def cos_size(self, q: int) -> int:
+        return bitset.count(self.cos[q])
+
+    def n_nodes(self) -> int:
+        return sum(self.cos_size(q) for q in range(self.query.n))
+
+    def n_edges(self) -> int:
+        return sum(sum(bitset.count(row) for row in d.values()) for d in self.fwd)
+
+    def size(self) -> int:
+        """Paper's graph-size metric: |nodes| + |edges|."""
+        return self.n_nodes() + self.n_edges()
+
+    def is_empty(self) -> bool:
+        return any(self.cos_size(q) == 0 for q in range(self.query.n))
+
+
+# ----------------------------------------------------------- node prefilter
+def prefilter(graph: DataGraph, q: PatternQuery) -> List[np.ndarray]:
+    """Structural node pre-filtering [10, 49] applied by the paper to JM/TM
+    (and to GM variants in Fig. 9): prune v from ms(q) unless its local
+    degrees can satisfy q's child-edge fan-in/out, and for descendant edges
+    unless v has any successor/predecessor at all when q does.
+    """
+    # Homomorphisms are not injective, so the sound degree bound is the
+    # number of *distinct labels* among child-edge neighbours (targets with
+    # different labels must map to different data nodes), not the edge count.
+    out_child_labels = [set() for _ in range(q.n)]
+    in_child_labels = [set() for _ in range(q.n)]
+    out_any = np.zeros(q.n, dtype=np.int64)
+    in_any = np.zeros(q.n, dtype=np.int64)
+    for e in q.edges:
+        out_any[e.src] += 1
+        in_any[e.dst] += 1
+        if e.kind == CHILD:
+            out_child_labels[e.src].add(q.labels[e.dst])
+            in_child_labels[e.dst].add(q.labels[e.src])
+    odeg = graph.out_degree()
+    ideg = graph.in_degree()
+    fb = []
+    for qi in range(q.n):
+        mask = graph.label_mask(q.labels[qi])
+        mask &= odeg >= len(out_child_labels[qi])
+        mask &= ideg >= len(in_child_labels[qi])
+        if out_any[qi] > 0:
+            mask &= odeg >= 1
+        if in_any[qi] > 0:
+            mask &= ideg >= 1
+        fb.append(bitset.pack(mask))
+    return fb
+
+
+# ------------------------------------------------------------------ BuildRIG
+def build_rig(graph: DataGraph, q: PatternQuery,
+              oracle: Optional[EdgeOracle] = None,
+              sim_algo: SimAlgo = "dagmap",
+              sim_passes: Optional[int] = 4,
+              use_prefilter: bool = False,
+              check_method: str = "bitbat",
+              expand_method: Literal["bitset", "interval"] = "bitset",
+              intervals: Optional[IntervalLabels] = None) -> RIG:
+    """Algorithm 4.
+
+    sim_algo:
+      * ``bas``    — FBSimBas (arbitrary edge order)
+      * ``dag``    — FBSim (Dag+Δ) without change-flag skipping
+      * ``dagmap`` — FBSim (Dag+Δ) + §5.5 convergence optimizations (default)
+      * ``none``   — skip double simulation (GM-F variant: prefilter only)
+    sim_passes: pass budget (paper fixes N=4); None = exact fixpoint.
+    """
+    oracle = oracle or EdgeOracle(graph)
+
+    # ---- phase (a): node selection
+    t0 = time.perf_counter()
+    sim: Optional[SimResult] = None
+    if use_prefilter:
+        fb0 = prefilter(graph, q)
+    else:
+        fb0 = match_sets(graph, q)
+    if sim_algo == "none":
+        cos = fb0
+    else:
+        if sim_algo == "bas":
+            sim = fb_sim_bas(graph, q, oracle, max_passes=sim_passes,
+                             method=check_method, fb0=fb0)
+        elif sim_algo == "dag":
+            sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
+                         method=check_method, use_change_flags=False)
+        else:
+            sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
+                         method=check_method, use_change_flags=True)
+        cos = sim.fb
+        if use_prefilter:
+            cos = [a & b for a, b in zip(cos, fb0)]
+    t1 = time.perf_counter()
+
+    # ---- phase (b): node expansion
+    fwd: List[Dict[int, np.ndarray]] = []
+    bwd: List[Dict[int, np.ndarray]] = []
+    n = graph.n
+    for e in q.edges:
+        f: Dict[int, np.ndarray] = {}
+        b: Dict[int, np.ndarray] = {}
+        src_idx = bitset.to_indices(cos[e.src], n)
+        dst_bits = cos[e.dst]
+        if expand_method == "interval" and intervals is not None and e.kind == DESC:
+            dst_idx = bitset.to_indices(dst_bits, n)
+            order = np.argsort(intervals.begin[dst_idx])
+            dst_sorted = dst_idx[order]
+            begins = intervals.begin[dst_sorted]
+            for v in src_idx:
+                # early expansion termination: stop once begin(v_q) > end(v_p)
+                hi = int(np.searchsorted(begins, intervals.end[int(v)],
+                                         side="right"))
+                cand = dst_sorted[:hi]
+                row = oracle.fwd_row(int(v), e.kind)
+                sel = cand[bitset.unpack(row, n)[cand]]
+                f[int(v)] = bitset.from_indices(sel, n)
+        else:
+            for v in src_idx:
+                f[int(v)] = oracle.fwd_row(int(v), e.kind) & dst_bits
+        # drop empty rows and build the reverse index
+        f = {v: r for v, r in f.items() if bitset.any_set(r)}
+        cols = np.zeros(bitset.n_words(n), dtype=np.uint64)
+        for r in f.values():
+            cols |= r
+        for u in bitset.to_indices(cols, n):
+            b[int(u)] = oracle.bwd_row(int(u), e.kind) & cos[e.src]
+        fwd.append(f)
+        bwd.append(b)
+    t2 = time.perf_counter()
+
+    return RIG(query=q, n_graph=n, cos=cos, fwd=fwd, bwd=bwd, sim=sim,
+               build_select_s=t1 - t0, build_expand_s=t2 - t1)

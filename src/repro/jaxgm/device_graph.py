@@ -1,0 +1,92 @@
+"""Device-resident packed data graph for the TPU-adapted matcher.
+
+Holds the four packed operand matrices of the §5.5 bitset algebra —
+adjacency, adjacency-transpose, reachability closure, closure-transpose —
+as ``uint32`` words padded to a block multiple, plus node labels.  Built
+either from a host :class:`~repro.core.graph.DataGraph` (closure from the
+host index) or entirely on device (closure via the ``closure`` kernel /
+blocked squaring).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitset as hostbits
+from ..core.graph import DataGraph
+from ..kernels import ops, packed
+
+PAD_LABEL = -2  # label id of padding nodes: never matches any query label
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeviceGraph:
+    n: int                      # real node count
+    n_pad: int                  # padded universe (multiple of block)
+    labels: jax.Array           # int32 (n_pad,), PAD_LABEL on padding
+    adj: jax.Array              # uint32 (n_pad, n_pad/32) children rows
+    adj_t: jax.Array            # parents rows
+    reach: jax.Array            # descendant rows (≺, path len >= 1)
+    reach_t: jax.Array          # ancestor rows
+
+    # --- pytree plumbing (n/n_pad are static aux data) ---
+    def tree_flatten(self):
+        return ((self.labels, self.adj, self.adj_t, self.reach, self.reach_t),
+                (self.n, self.n_pad))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        labels, adj, adj_t, reach, reach_t = children
+        n, n_pad = aux
+        return cls(n=n, n_pad=n_pad, labels=labels, adj=adj, adj_t=adj_t,
+                   reach=reach, reach_t=reach_t)
+
+    @property
+    def n_words(self) -> int:
+        return self.n_pad // 32
+
+
+def _repack_pad(words64: np.ndarray, n: int, n_pad: int) -> np.ndarray:
+    """Host uint64-packed rows over universe n -> uint32 rows over n_pad."""
+    dense = hostbits.unpack(words64, n)
+    rows = dense.shape[0]
+    out = np.zeros((n_pad, n_pad), dtype=bool)
+    out[:rows, :n] = dense
+    return np.asarray(packed.pack(jnp.asarray(out)))
+
+
+def from_host(graph: DataGraph, block: int = 512,
+              closure_on_device: bool = False,
+              impl: str = "auto") -> DeviceGraph:
+    n = graph.n
+    n_pad = ((n + block - 1) // block) * block
+    labels = np.full(n_pad, PAD_LABEL, dtype=np.int32)
+    labels[:n] = graph.labels
+
+    adj = _repack_pad(graph.adj_bits(), n, n_pad)
+    adj_t = _repack_pad(graph.adj_bits_t(), n, n_pad)
+    if closure_on_device:
+        reach = np.asarray(ops.transitive_closure(jnp.asarray(adj), impl=impl))
+        dense = np.asarray(packed.unpack(jnp.asarray(reach), n_pad))
+        reach_t = np.asarray(packed.pack(jnp.asarray(dense.T)))
+    else:
+        ridx = graph.reachability()
+        reach = _repack_pad(ridx.reach_bits, n, n_pad)
+        reach_t = _repack_pad(ridx.bits_t(), n, n_pad)
+    return DeviceGraph(n=n, n_pad=n_pad,
+                       labels=jnp.asarray(labels),
+                       adj=jnp.asarray(adj), adj_t=jnp.asarray(adj_t),
+                       reach=jnp.asarray(reach), reach_t=jnp.asarray(reach_t))
+
+
+def stacked_matrices(dg: DeviceGraph) -> jax.Array:
+    """(4, n_pad, W) stacked [adj, reach, adj_t, reach_t] — lets the
+    enumerator pick the operand with one flat gather:
+    matrix id = 2 * is_backward + (kind == DESC)."""
+    return jnp.stack([dg.adj, dg.reach, dg.adj_t, dg.reach_t], axis=0)

@@ -1,0 +1,108 @@
+"""Tensor encoding of pattern queries (fixed max_q / max_e padding).
+
+Encoding queries as flat int arrays makes the whole matcher a function of
+arrays only — so a *batch of queries* is just stacked tensors and the
+pipeline ``vmap``s over it (the serving driver's batching axis).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.query import CHILD, DESC, PatternQuery
+
+PAD = -1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QueryTensor:
+    labels: jax.Array      # int32 (max_q,), PAD on padding
+    edge_src: jax.Array    # int32 (max_e,)
+    edge_dst: jax.Array    # int32 (max_e,)
+    edge_kind: jax.Array   # int32 (max_e,): 0 child, 1 desc, PAD padding
+    n_nodes: jax.Array     # int32 scalar
+    n_edges: jax.Array     # int32 scalar
+
+    def tree_flatten(self):
+        return ((self.labels, self.edge_src, self.edge_dst, self.edge_kind,
+                 self.n_nodes, self.n_edges), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def max_q(self) -> int:
+        return self.labels.shape[-1]
+
+    @property
+    def max_e(self) -> int:
+        return self.edge_src.shape[-1]
+
+
+def encode_query(q: PatternQuery, max_q: int, max_e: int) -> QueryTensor:
+    assert q.n <= max_q, f"query has {q.n} nodes > max_q={max_q}"
+    assert q.m <= max_e, f"query has {q.m} edges > max_e={max_e}"
+    labels = np.full(max_q, PAD, dtype=np.int32)
+    labels[:q.n] = q.labels
+    src = np.full(max_e, 0, dtype=np.int32)
+    dst = np.full(max_e, 0, dtype=np.int32)
+    kind = np.full(max_e, PAD, dtype=np.int32)
+    for i, e in enumerate(q.edges):
+        src[i], dst[i], kind[i] = e.src, e.dst, e.kind
+    return QueryTensor(labels=jnp.asarray(labels), edge_src=jnp.asarray(src),
+                       edge_dst=jnp.asarray(dst), edge_kind=jnp.asarray(kind),
+                       n_nodes=jnp.int32(q.n), n_edges=jnp.int32(q.m))
+
+
+def encode_batch(queries: Sequence[PatternQuery], max_q: int,
+                 max_e: int) -> QueryTensor:
+    qts = [encode_query(q, max_q, max_e) for q in queries]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *qts)
+
+
+def query_adjacency(qt: QueryTensor) -> jax.Array:
+    """Undirected (max_q, max_q) bool adjacency of the pattern."""
+    max_q = qt.max_q
+    valid = qt.edge_kind >= 0
+    a = jnp.zeros((max_q, max_q), bool)
+    a = a.at[qt.edge_src, qt.edge_dst].max(valid)
+    a = a.at[qt.edge_dst, qt.edge_src].max(valid)
+    return a
+
+
+def jo_order(qt: QueryTensor, fb_sizes: jax.Array) -> jax.Array:
+    """Device-side JO ordering (§6.1): greedy smallest-candidate-set-first
+    with connectivity to the prefix.  fb_sizes: (max_q,) int32 candidate-set
+    cardinalities from the double simulation.  Returns (max_q,) int32 order
+    (positions >= n_nodes hold arbitrary leftover nodes)."""
+    max_q = qt.max_q
+    adj = query_adjacency(qt)
+    real = jnp.arange(max_q) < qt.n_nodes
+    INF = jnp.iinfo(jnp.int32).max      # NB: int64 silently truncates w/o x64
+    sizes = jnp.where(real, jnp.minimum(fb_sizes, INF - 1), INF)
+
+    def step(state, i):
+        selected, order = state
+        touching = (adj & selected[None, :]).any(axis=1)
+        eligible = (~selected) & real & jnp.where(i == 0, True, touching)
+        # fall back to any unselected real node (disconnected guard)
+        any_elig = eligible.any()
+        fallback = (~selected) & real
+        elig = jnp.where(any_elig, eligible, fallback)
+        cost = jnp.where(elig, sizes, INF)
+        nxt = jnp.argmin(cost).astype(jnp.int32)
+        selected = selected.at[nxt].set(real[nxt])
+        order = order.at[i].set(jnp.where(i < qt.n_nodes, nxt, PAD))
+        return (selected, order), None
+
+    sel0 = jnp.zeros(max_q, bool)
+    ord0 = jnp.full(max_q, PAD, jnp.int32)
+    (_, order), _ = jax.lax.scan(step, (sel0, ord0), jnp.arange(max_q))
+    return order

@@ -1,0 +1,105 @@
+"""JaxGM — the device-side GM pipeline (single query and vmapped batches).
+
+match(query) = encode → double simulation → JO order (device) → frontier
+MJoin.  A batch of queries is the same function under ``vmap`` over the
+QueryTensor leaves — the packed graph matrices are closed over (shared).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import DataGraph
+from ..core.query import PatternQuery
+from . import device_graph
+from .device_graph import DeviceGraph
+from .encoding import QueryTensor, encode_batch, encode_query, jo_order
+from .enumerate import MJoinCount, decode_tuples, mjoin_count
+from .simulation import double_simulation, fb_sizes, rig_edge_counts
+
+
+@dataclass
+class JaxMatchResult:
+    count: int
+    overflowed: bool
+    fb_sizes: np.ndarray          # |cos(q)| per query node
+    tuples: Optional[np.ndarray] = None
+
+
+def _pipeline(dg: DeviceGraph, qt: QueryTensor, *, n_passes: int,
+              exact_sim: bool, capacity: int, impl: str,
+              materialize: bool) -> tuple:
+    fb = double_simulation(dg, qt, n_passes=n_passes, impl=impl,
+                           exact=exact_sim)
+    sizes = fb_sizes(fb)
+    order = jo_order(qt, sizes)
+    res = mjoin_count(dg, qt, fb, order, capacity=capacity,
+                      materialize=materialize)
+    return res, sizes, order
+
+
+class JaxGM:
+    """Device matcher bound to one data graph."""
+
+    def __init__(self, graph: DataGraph, *, max_q: int = 8, max_e: int = 16,
+                 block: int = 512, capacity: int = 4096, n_passes: int = 4,
+                 exact_sim: bool = False, impl: str = "auto",
+                 closure_on_device: bool = False,
+                 use_transitive_reduction: bool = True):
+        self.graph = graph
+        self.max_q, self.max_e = max_q, max_e
+        self.capacity, self.n_passes = capacity, n_passes
+        self.exact_sim, self.impl = exact_sim, impl
+        self.use_tr = use_transitive_reduction
+        self.dg = device_graph.from_host(graph, block=block,
+                                         closure_on_device=closure_on_device,
+                                         impl=impl)
+        self._single = partial(_pipeline, n_passes=n_passes,
+                               exact_sim=exact_sim, capacity=capacity,
+                               impl=impl)
+        self._batched = jax.vmap(
+            lambda qt: self._single(self.dg, qt, materialize=False),
+            in_axes=(0,))
+
+    def _prep(self, q: PatternQuery) -> tuple:
+        if self.use_tr:
+            q = q.transitive_reduction()
+        return q, encode_query(q, self.max_q, self.max_e)
+
+    def match(self, q: PatternQuery,
+              materialize: bool = False) -> JaxMatchResult:
+        q, qt = self._prep(q)
+        res, sizes, order = self._single(self.dg, qt, materialize=materialize)
+        tuples = None
+        if materialize:
+            tuples = decode_tuples(res, order, q.n)
+        return JaxMatchResult(count=int(res.count),
+                              overflowed=bool(res.overflowed),
+                              fb_sizes=np.asarray(sizes)[:q.n],
+                              tuples=tuples)
+
+    def match_batch(self, queries: Sequence[PatternQuery]) -> List[JaxMatchResult]:
+        prepped = [self._prep(q) for q in queries]
+        qts = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[qt for _, qt in prepped])
+        res, sizes, order = self._batched(qts)
+        out = []
+        for i, (q, _) in enumerate(prepped):
+            out.append(JaxMatchResult(
+                count=int(res.count[i]), overflowed=bool(res.overflowed[i]),
+                fb_sizes=np.asarray(sizes[i])[:q.n]))
+        return out
+
+    def rig_stats(self, q: PatternQuery):
+        """(fb sizes, per-edge RIG edge counts) — Fig. 9 statistics."""
+        q, qt = self._prep(q)
+        fb = double_simulation(self.dg, qt, n_passes=self.n_passes,
+                               impl=self.impl, exact=self.exact_sim)
+        return (np.asarray(fb_sizes(fb))[:q.n],
+                np.asarray(rig_edge_counts(self.dg, qt, fb, impl=self.impl))[:q.m])

@@ -1,0 +1,13 @@
+# TPU compute hot-spots of the paper's pipeline, as Pallas kernels:
+#   bitmm     — packed-bit boolean matmul (the paper's §5.5 bitset batch op,
+#               re-tiled for VMEM + MXU)            -> bitmm.py
+#   closure   — packed boolean matrix squaring (descendant-edge substrate,
+#               replaces CPU BFL probes)            -> closure.py
+#   intersect — k-way AND + popcount (MJoin multiway candidate step)
+#                                                   -> intersect.py
+# ops.py dispatches pallas / blocked-jnp / reference; ref.py holds oracles.
+from . import ops, packed, ref
+from .ops import bitmm, closure_step, intersect, transitive_closure
+
+__all__ = ["ops", "packed", "ref", "bitmm", "closure_step", "intersect",
+           "transitive_closure"]

@@ -1,0 +1,87 @@
+"""``bitmm`` — bit-packed boolean matmul Pallas TPU kernel.
+
+The workhorse of the TPU-adapted matcher: computes ``Y = f(A · X)`` where
+``A`` is a 0/1 matrix stored bit-packed (uint32 words, 32x less HBM traffic
+than bf16) and ``X`` is a small dense 0/1 right operand (e.g. the FB
+candidate matrix transposed, B = number of query nodes).
+
+TPU adaptation of the paper's roaring-bitmap ``bitBat`` batch op (§5.5):
+instead of word-wise AND/OR on a scalar core, each grid step unpacks a
+``(bm, bk)`` tile of A *in VMEM* (shift+mask against a 32-lane iota) and
+feeds the MXU with a dense bf16 tile; the epilogue applies either
+
+* ``threshold`` — ``Y = (A@X) > 0``   (existence semantics: simulation), or
+* ``sum``       — ``Y = A@X``         (count semantics: GNN sum-aggregation).
+
+Grid: ``(M/bm, K/bk)`` with the contraction dimension innermost
+(``arbitrary``), accumulating into a VMEM scratch tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _bitmm_kernel(a_ref, x_ref, o_ref, acc_ref, *, threshold: bool):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    words = a_ref[...]                                     # (bm, bk/32) uint32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)   # (bm, bk/32, 32)
+    a_dense = bits.reshape(words.shape[0], -1).astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(a_dense, x_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if threshold:
+            o_ref[...] = (acc > 0).astype(o_ref.dtype)
+        else:
+            o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("threshold", "bm", "bk", "interpret"))
+def bitmm_pallas(a_words: jax.Array, x: jax.Array, *, threshold: bool = True,
+                 bm: int = 256, bk: int = 1024,
+                 interpret: bool = False) -> jax.Array:
+    """Y = f(unpack(a_words) @ x).
+
+    a_words: uint32 (M, K/32); x: (K, B) float/bool; Y: (M, B) float32.
+    M % bm == 0 and K % bk == 0 are required (pad upstream); B is kept whole
+    (it is small — query width), padded to the lane count by the caller if
+    needed.
+    """
+    m, wk = a_words.shape
+    kdim, b = x.shape
+    assert wk * WORD == kdim, (wk, kdim)
+    bm = min(bm, m)
+    bk = min(bk, kdim)
+    assert m % bm == 0 and kdim % bk == 0, (m, bm, kdim, bk)
+    grid = (m // bm, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_bitmm_kernel, threshold=threshold),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk // WORD), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, b), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, b), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, b), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_words, x)

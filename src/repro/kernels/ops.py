@@ -1,0 +1,128 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+Every op takes ``impl``:
+
+* ``"pallas"``     — the TPU kernel (compiled on TPU; ``interpret=True``
+                     execution elsewhere, used by the correctness sweeps),
+* ``"blocked"``    — memory-lean pure-jnp implementation that unpacks one
+                     K-block at a time (lax.scan); this is what the multi-pod
+                     dry-run lowers (identical math, no Pallas dependency,
+                     never materializes the full unpacked matrix),
+* ``"reference"``  — the ref.py oracle (materializes; small inputs only),
+* ``"auto"``       — pallas on TPU backends, blocked otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import packed, ref
+from .bitmm import bitmm_pallas
+from .closure import closure_step_pallas
+from .intersect import intersect_pallas
+
+WORD = 32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "blocked"
+    return impl
+
+
+# ------------------------------------------------------------------- bitmm
+@functools.partial(jax.jit, static_argnames=("threshold", "block_k", "unroll"))
+def _bitmm_blocked(a_words, x, threshold: bool = True, block_k: int = 4096,
+                   unroll: bool = False):
+    """``unroll=True`` replaces the chunk scan with a python loop — the
+    dry-run cost-calibration mode (HLO cost analysis counts scan bodies
+    once; see launch/dryrun.py)."""
+    m, w = a_words.shape
+    k, b = x.shape
+    block_k = min(block_k, k)
+    assert k % block_k == 0, (k, block_k)
+    nk = k // block_k
+    wk = block_k // WORD
+
+    def body_chunk(acc, aw, xc):
+        a_dense = packed.unpack(aw).astype(jnp.bfloat16)          # (m, block_k)
+        return acc + jnp.dot(a_dense, xc.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+
+    acc = jnp.zeros((m, b), jnp.float32)
+    if unroll:
+        # §Perf H7: slice chunks in place — the scan path's stacked
+        # (nk, m, wk) transpose copy doubles the matrix's HBM footprint.
+        for i in range(nk):
+            acc = body_chunk(acc, jax.lax.dynamic_slice_in_dim(
+                a_words, i * wk, wk, axis=1),
+                jax.lax.dynamic_slice_in_dim(x, i * block_k, block_k, axis=0))
+    else:
+        a_chunks = a_words.reshape(m, nk, wk).transpose(1, 0, 2)  # (nk, m, wk)
+        x_chunks = x.reshape(nk, block_k, b)
+
+        def body(acc, operands):
+            aw, xc = operands
+            return body_chunk(acc, aw, xc), None
+
+        acc, _ = jax.lax.scan(body, acc, (a_chunks, x_chunks))
+    return (acc > 0) if threshold else acc
+
+
+def bitmm(a_words: jax.Array, x: jax.Array, *, threshold: bool = True,
+          impl: str = "auto", **kw) -> jax.Array:
+    """Y = f(unpack(a_words) @ x); see kernels/bitmm.py."""
+    impl = _resolve(impl)
+    if impl == "reference":
+        return ref.bitmm_ref(a_words, x, threshold=threshold)
+    if impl == "blocked":
+        return _bitmm_blocked(a_words, x, threshold=threshold,
+                              **{k: v for k, v in kw.items() if k == "block_k"})
+    out = bitmm_pallas(a_words, x, threshold=threshold,
+                       interpret=not _on_tpu(), **kw)
+    return (out > 0) if threshold else out
+
+
+# ------------------------------------------------------------ closure step
+@jax.jit
+def _closure_step_blocked(r_words):
+    n, w = r_words.shape
+    dense = packed.unpack(r_words, n)            # (N, N) bool — CPU-scale only
+    r2 = (dense.astype(jnp.float32) @ dense.astype(jnp.float32)) > 0
+    return packed.pack(r2 | dense)
+
+
+def closure_step(r_words: jax.Array, *, impl: str = "auto", **kw) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "reference":
+        return ref.closure_step_ref(r_words)
+    if impl == "blocked":
+        return _closure_step_blocked(r_words)
+    return closure_step_pallas(r_words, interpret=not _on_tpu(), **kw)
+
+
+def transitive_closure(adj_words: jax.Array, *, impl: str = "auto",
+                       n_steps: int | None = None, **kw) -> jax.Array:
+    import math
+    n = adj_words.shape[0]
+    steps = n_steps if n_steps is not None else max(1, math.ceil(math.log2(max(n, 2))))
+    r = adj_words
+    for _ in range(steps):
+        r = closure_step(r, impl=impl, **kw)
+    return r
+
+
+# --------------------------------------------------------------- intersect
+def intersect(rows: jax.Array, *, impl: str = "auto", **kw):
+    """rows uint32 (F, K, W) -> (and_rows (F, W), counts (F,))."""
+    impl = _resolve(impl)
+    if impl in ("reference", "blocked"):
+        return ref.intersect_ref(rows)
+    return intersect_pallas(rows, interpret=not _on_tpu(), **kw)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose (exact for the integer/boolean kernels) against
+these functions.  They are also usable as slow fallbacks on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import packed
+
+
+def bitmm_ref(a_words: jax.Array, x: jax.Array, *,
+              threshold: bool = True) -> jax.Array:
+    """Boolean matmul with a bit-packed left operand.
+
+    a_words: uint32 (M, K/32) — packed 0/1 matrix rows.
+    x:       (K, B) float or bool — dense right operand.
+    returns  (M, B): ``threshold=True`` -> bool (any-path exists: (A@x) > 0);
+             ``threshold=False`` -> float32 counts (A @ x)  [GNN sum-agg].
+    """
+    a = packed.unpack(a_words).astype(jnp.float32)          # (M, K)
+    y = a @ x.astype(jnp.float32)
+    return (y > 0) if threshold else y
+
+
+def closure_step_ref(r_words: jax.Array) -> jax.Array:
+    """One boolean-squaring step of transitive closure on packed rows:
+    R' = R | (R·R > 0), packed uint32 (N, N/32) -> same shape."""
+    n = r_words.shape[0]
+    r = packed.unpack(r_words, n).astype(jnp.float32)       # (N, N)
+    r2 = (r @ r) > 0
+    return packed.pack(r2 | (r > 0))
+
+
+def intersect_ref(rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """K-way AND + popcount.
+
+    rows: uint32 (F, K, W) — per item, K packed rows to intersect.
+    returns (and_rows uint32 (F, W), counts int32 (F,)).
+    """
+    acc = rows[:, 0]
+    for i in range(1, rows.shape[1]):
+        acc = acc & rows[:, i]
+    counts = packed.popcount(acc).sum(axis=-1)
+    return acc, counts
+
+
+def segsum_ref(edge_src: jax.Array, edge_dst: jax.Array, feats: jax.Array,
+               n_nodes: int) -> jax.Array:
+    """Edge-index message passing oracle: out[d] = Σ_{(s,d)∈E} feats[s].
+
+    The production path is ``jax.ops.segment_sum``; this oracle recomputes
+    it with an explicit scatter-add for kernel tests.
+    """
+    msgs = feats[edge_src]
+    return jnp.zeros((n_nodes, feats.shape[-1]), feats.dtype).at[edge_dst].add(msgs)

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count at
+#   first backend initialization.  (Only the dry-run wants 512 placeholder
+#   devices — tests and benches see the real device count.)
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+For each cell:
+  * build the step function + abstract inputs from the arch config,
+  * ``jax.jit(step, in_shardings=...).lower(*specs).compile()`` on the
+    production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  * record ``memory_analysis()`` (fits-per-device proof),
+    ``cost_analysis()`` (FLOPs/bytes), and the collective-byte census parsed
+    from the compiled HLO — the inputs to §Roofline.
+
+Results append incrementally to a JSON manifest so long sweeps are
+restartable (``--skip-existing``).
+
+Usage:
+  python -m repro.launch.dryrun [--arch yi-34b] [--shape train_4k]
+      [--mesh pod|multipod|both] [--out results/dryrun.json]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import all_arch_ids, get_config
+from .mesh import make_production_mesh
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _wire_bytes(kind: str, out_bytes: int, g: int) -> float:
+    """Per-device wire traffic estimate from the op's *output* shape (the
+    partitioned HLO prints per-device shapes; operands carry no inline type).
+    Ring-algorithm costs with group size g:
+      all-gather       recv (g-1)/g · out
+      all-reduce       2 · (g-1)/g · out           (reduce-scatter + AG)
+      reduce-scatter   send (g-1) · out            (out = in/g)
+      all-to-all       (g-1)/g · out
+      collective-permute  out
+    """
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-device collective census from partitioned HLO text."""
+    out = {k: {"count": 0, "output_bytes": 0, "wire_bytes": 0.0}
+           for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)$", s)
+        if not m:
+            continue
+        body = m.group(1)
+        # the op name immediately precedes its operand parens; tuple-shaped
+        # outputs put "(" first, so match "<kind>(" anywhere in the body.
+        km = re.search(
+            r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", body)
+        if not km or km.group(2) == "-done":  # -start/-done pairs count once
+            continue
+        kind = km.group(1)
+        op_pos = km.start()
+        out_shapes = _SHAPE_RE.findall(body[:op_pos])
+        out_bytes = sum(_shape_bytes(d, s) for d, s in out_shapes)
+        gm = _GROUP_RE.search(body)
+        g = int(gm.group(2)) if gm else 2     # conservative default
+        if kind == "collective-permute":
+            g = 2
+        out[kind]["count"] += 1
+        out[kind]["output_bytes"] += out_bytes
+        out[kind]["wire_bytes"] += _wire_bytes(kind, out_bytes, g)
+    return out
+
+
+def _cost_of(compiled) -> dict:
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (
+        cost_list[0] if cost_list else {})
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def _global_cost(unit) -> dict:
+    """Lower the step on a SINGLE abstract device (no partitioner) and read
+    the whole-program cost.  Rationale: on the partitioned module, GSPMD's
+    windowed-einsum rewrites turn large sharded matmuls into while loops
+    whose bodies HloCostAnalysis counts once — undercounting FLOPs by the
+    trip count.  The unpartitioned module has no such loops; per-device
+    cost = global / n_devices (flop-balanced sharding)."""
+    jitted = jax.jit(unit.step_fn)
+    compiled = jitted.lower(*unit.args).compile()
+    return _cost_of(compiled)
+
+
+def lm_calibrated_cost(cfg, shape: str, mesh, n_dev: int) -> dict:
+    """Global-cost extrapolation over depth: HLO cost analysis counts a
+    lax.scan body once, so lower *unrolled* L=2 and L=4 single-device
+    variants; everything linear in depth extrapolates exactly:
+        total(L) = fixed + per_layer · L,  per_layer = (C4 - C2) / 2.
+    """
+    c2 = _global_cost(cfg.build_dryrun(shape, mesh, layers_override=2,
+                                       unroll=True))
+    c4 = _global_cost(cfg.build_dryrun(shape, mesh, layers_override=4,
+                                       unroll=True))
+    L = cfg.cfg.n_layers
+    out = {}
+    for key in ("flops", "bytes accessed"):
+        per_layer = (c4[key] - c2[key]) / 2.0
+        glob = max(c2[key] - 2 * per_layer + L * per_layer, 0.0)
+        out[key] = glob / n_dev            # per-device share
+        out[key + "_global"] = glob
+    return out
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str,
+             calibrate: bool = True) -> dict:
+    cfg = get_config(arch_id)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    unit = cfg.build_dryrun(shape, mesh)
+    t0 = time.time()
+    jitted = jax.jit(unit.step_fn, in_shardings=unit.in_shardings,
+                     out_shardings=unit.out_shardings,
+                     donate_argnums=unit.donate)
+    with mesh, jax.set_mesh(mesh):
+        lowered = jitted.lower(*unit.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_rec[k] = int(getattr(mem, k, 0) or 0)
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (
+        cost_list[0] if cost_list else {})
+    cost_rec = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "bytes accessed operand 0 {}", "optimal_seconds")}
+    census = collective_census(compiled.as_text())
+
+    rec = {
+        "arch": arch_id, "shape": shape, "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_rec,
+        "cost": cost_rec,
+        "collectives": census,
+        "collective_wire_bytes_per_device": sum(
+            v["wire_bytes"] for v in census.values()),
+        "model_flops": float(cfg.model_flops(shape)),
+    }
+    # --- cost calibration (see _global_cost / lm_calibrated_cost) ---------
+    # pattern cells are shard_map with unrolled chunk loops: the partitioned
+    # per-device numbers above are already correct.  LM/GNN/recsys cells go
+    # through the partitioner (windowed einsums) — recompute their
+    # flops/bytes from unpartitioned lowerings.
+    if calibrate and cfg.family == "lm":
+        cal = lm_calibrated_cost(cfg, shape, mesh, n_dev)
+        rec["cost_calibrated"] = cal
+        rec["cost"]["flops"] = cal["flops"]
+        rec["cost"]["bytes accessed"] = cal["bytes accessed"]
+    elif calibrate and cfg.family in ("gnn", "recsys"):
+        cal = _global_cost(unit)
+        rec["cost_calibrated"] = {k: v / n_dev for k, v in cal.items()}
+        rec["cost"]["flops"] = cal["flops"] / n_dev
+        rec["cost"]["bytes accessed"] = cal["bytes accessed"] / n_dev
+    elif calibrate and cfg.family == "pattern":
+        # the artifact scans its matmul chunks (memory-lean); cost comes
+        # from an unrolled lowering that counts every chunk.
+        unit_u = cfg.build_dryrun(shape, mesh, unroll=True)
+        jit_u = jax.jit(unit_u.step_fn, in_shardings=unit_u.in_shardings)
+        with mesh, jax.set_mesh(mesh):
+            comp_u = jit_u.lower(*unit_u.args).compile()
+        cal = _cost_of(comp_u)
+        rec["cost_calibrated"] = cal
+        rec["cost"]["flops"] = cal["flops"]
+        rec["cost"]["bytes accessed"] = cal["bytes accessed"]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--include-pattern", action="store_true", default=True)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    archs = [args.arch] if args.arch else all_arch_ids()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    for arch_id in archs:
+        cfg = get_config(arch_id)
+        shapes = [args.shape] if args.shape else list(cfg.shapes)
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = (arch_id, shape, mesh_kind)
+                if args.skip_existing and key in done:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[dryrun] {arch_id} × {shape} × {mesh_kind} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch_id, shape, mesh_kind)
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['cost'].get('flops', 0):.3e} "
+                          f"coll_B/dev={rec['collective_wire_bytes_per_device']:.3e}",
+                          flush=True)
+                except Exception as e:  # record failures; they are bugs
+                    rec = {"arch": arch_id, "shape": shape,
+                           "mesh": mesh_kind, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"  ERROR: {type(e).__name__}: {e}", flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] manifest: {args.out} — {n_ok}/{len(results)} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax-importing import (see dryrun.py).
+
+"""§Perf hillclimbing driver: lower baseline + variants for the three
+chosen cells, record all three roofline terms per iteration, append to
+results/perf_iterations.json.
+
+  python -m repro.launch.hillclimb [--out results/perf_iterations.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from .dryrun import _cost_of, _global_cost, collective_census, lm_calibrated_cost
+from .mesh import make_production_mesh
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+# (arch, shape, mesh, variant, hypothesis)
+CELLS = [
+    # --- cell 1: yi-34b train_4k — worst LM roofline fraction, memory-bound
+    ("yi-34b", "train_4k", "pod", "baseline",
+     "baseline: dense T×T attention + full (B,T,V) f32 logits"),
+    ("yi-34b", "train_4k", "pod", "flash",
+     "H1: streaming KV chunks (online softmax) removes the (B,H,T,T) score "
+     "buffer -> memory term drops ~T/chunk on the attention share"),
+    ("yi-34b", "train_4k", "pod", "flash+chunkloss",
+     "H2: streaming lm_head CE removes the (B,T,V) f32 logits buffer "
+     "-> remaining memory term drops toward the parameter/activation floor"),
+    ("yi-34b", "train_4k", "pod", "flash+chunkloss+wsc",
+     "H10: pin activations' batch dim to the data axes at every layer "
+     "boundary — GSPMD had propagated a weight-stationary layout into the "
+     "scan (batch REPLICATED, d_model sharded): temp should fall ~16x"),
+    ("yi-34b", "train_4k", "pod", "flash+chunkloss+wsc+ckptchunk",
+     "H11: checkpoint the flash chunk body — autodiff was saving each "
+     "chunk's probability tensor for bwd (~17 GB x chunks x live layers); "
+     "recompute-in-bwd drops the residual temp toward the carry floor"),
+    # --- extension: the validated LM chain on two more train cells
+    ("qwen2-7b", "train_4k", "pod", "baseline",
+     "baseline for comparison (memory-bound, 24.3% roofline)"),
+    ("qwen2-7b", "train_4k", "pod", "flash+chunkloss+wsc+ckptchunk",
+     "H1+H2+H10+H11 transferred: same memory-bound profile as yi"),
+    ("grok-1-314b", "train_4k", "pod", "baseline",
+     "baseline for comparison — the one COMPUTE-bound LM train cell: "
+     "prediction: the memory-term chain helps little here (cross-check)"),
+    ("grok-1-314b", "train_4k", "pod", "flash+chunkloss+wsc+ckptchunk",
+     "H12: on a compute-bound cell the chain should move memory/collective "
+     "terms but NOT the roofline fraction (bound stays compute)"),
+    # --- cell 2: gin-tu ogb_products — most collective-bound cell
+    ("gin-tu", "ogb_products", "pod", "baseline",
+     "baseline: pjit auto-sharding scatters (E,d) messages across shards"),
+    ("gin-tu", "ogb_products", "pod", "shardmap",
+     "H3: dst-partitioned edges + one tiled all-gather of the (N,d) feature "
+     "matrix per layer -> collective volume independent of E (N·d vs E·d)"),
+    # --- cell 3: rig_gm serve_1m — the paper-technique cell, memory-bound
+    ("rig_gm", "serve_1m", "pod", "baseline",
+     "baseline: bf16 unpack (already 2x better than f32), bool Y gather"),
+    ("rig_gm", "serve_1m", "pod", "packy",
+     "H4: Y is bits; pack to uint32 before the all-gather -> 8x less wire"),
+    ("rig_gm", "serve_1m", "pod", "b128",
+     "H5: 4x query batch amortizes the packed-matrix reads -> per-query "
+     "memory term ~4x lower (matrix traffic dominates and is batch-invariant)"),
+    ("rig_gm", "serve_1m", "pod", "bk1024",
+     "H8: 4x smaller unpack chunks shrink the live unpack temporaries "
+     "(the 39 GB HBM peak) ~4x; HBM *traffic* unchanged — on TPU the "
+     "Pallas bitmm removes these temporaries entirely (VMEM-only unpack)"),
+    ("rig_gm", "serve_1m", "pod", "scan-artifact",
+     "H9: deploy the SCANNED blocked matmul (buffers reused across chunk "
+     "iterations) and keep the unrolled form for cost counting only -> "
+     "temp drops from 39 GB to the per-chunk working set; fits 16 GB"),
+    ("rig_gm", "serve_1m", "pod", "best",
+     "H4+H5+H9 combined: packed Y + 128-query batch + scanned chunks"),
+]
+
+
+def lower_cell(arch_id, shape, mesh_kind, variant):
+    cfg = get_config(arch_id)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    unit = cfg.build_dryrun(shape, mesh, variant=variant) \
+        if variant != "baseline" else cfg.build_dryrun(shape, mesh)
+    jitted = jax.jit(unit.step_fn, in_shardings=unit.in_shardings,
+                     donate_argnums=unit.donate)
+    with mesh, jax.set_mesh(mesh):
+        compiled = jitted.lower(*unit.args).compile()
+    mem = compiled.memory_analysis()
+    census = collective_census(compiled.as_text())
+    wire = sum(v["wire_bytes"] for v in census.values())
+    # calibrated global flops/bytes
+    if cfg.family == "lm":
+        def build(shape_, mesh_, layers_override=None, unroll=False):
+            return cfg.build_dryrun(shape_, mesh_,
+                                    layers_override=layers_override,
+                                    unroll=unroll, variant=variant)
+        import types
+        proxy = types.SimpleNamespace(build_dryrun=build, cfg=cfg.cfg)
+        cal = lm_calibrated_cost(proxy, shape, mesh, n_dev)
+        flops_dev = cal["flops"]
+        bytes_dev = cal["bytes accessed"]
+    elif cfg.family == "pattern":
+        unit_u = cfg.build_dryrun(shape, mesh, variant=variant, unroll=True)
+        jit_u = jax.jit(unit_u.step_fn, in_shardings=unit_u.in_shardings)
+        with mesh, jax.set_mesh(mesh):
+            comp_u = jit_u.lower(*unit_u.args).compile()
+        c = _cost_of(comp_u)
+        flops_dev, bytes_dev = c["flops"], c["bytes accessed"]
+    else:
+        c = _global_cost(unit)
+        flops_dev = c["flops"] / n_dev
+        bytes_dev = c["bytes accessed"] / n_dev
+    batch_scale = 4.0 if variant in ("b128", "best") else 1.0  # per-query
+    terms = {
+        "t_compute_s": flops_dev / PEAK / batch_scale,
+        "t_memory_s": bytes_dev / HBM / batch_scale,
+        "t_collective_s": wire / LINK / batch_scale,
+    }
+    dominant = max(terms, key=terms.get)
+    model = cfg.model_flops(shape)
+    bound = max(terms.values())
+    return {
+        "arch": arch_id, "shape": shape, "mesh": mesh_kind,
+        "variant": variant, "terms": terms, "dominant": dominant,
+        "bound_s": bound,
+        "roofline_fraction": model / (n_dev * PEAK * bound) if bound else 0,
+        "memory": {
+            "args_GB": mem.argument_size_in_bytes / 1e9,
+            "temp_GB": mem.temp_size_in_bytes / 1e9,
+            "out_GB": mem.output_size_in_bytes / 1e9,
+            "fits_16GB": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                          + mem.output_size_in_bytes
+                          - mem.alias_size_in_bytes) < 16e9,
+        },
+        "wire_bytes_per_dev": wire,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"], r["variant"])
+            for r in results if "terms" in r}
+    for (arch, shape, mesh_kind, variant, hyp) in CELLS:
+        if args.only and arch != args.only:
+            continue
+        key = (arch, shape, mesh_kind, variant)
+        if key in done:
+            print(f"[skip] {key}")
+            continue
+        print(f"[perf] {arch} × {shape} × {variant} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = lower_cell(arch, shape, mesh_kind, variant)
+            rec["hypothesis"] = hyp
+            rec["wall_s"] = round(time.time() - t0, 1)
+            t = rec["terms"]
+            print(f"  compute={t['t_compute_s']:.3e} "
+                  f"memory={t['t_memory_s']:.3e} "
+                  f"coll={t['t_collective_s']:.3e} "
+                  f"dominant={rec['dominant']} "
+                  f"fits={rec['memory']['fits_16GB']}", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "variant": variant, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"  ERROR {e}", flush=True)
+        results = [r for r in results
+                   if (r["arch"], r["shape"], r["mesh"],
+                       r["variant"]) != key]
+        results.append(rec)
+        json.dump(results, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so that importing this module
+never touches jax device state — the dry-run must set XLA flags before the
+first device query.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly simulated) local devices."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,514 @@
+"""Decoder-only LM substrate: dense and MoE transformers.
+
+Covers the five assigned LM architectures (yi-34b, qwen1.5-4b, qwen2-7b,
+grok-1-314b, deepseek-moe-16b): GQA with optional QKV bias, RoPE, RMSNorm,
+SwiGLU FFN, and an MoE block with shared + routed experts (top-k, grouped
+sort-based dispatch with per-group capacity — no (T, E, C) dispatch tensor).
+
+Layers are stacked and iterated with ``lax.scan`` so the HLO stays one
+layer deep (essential for 512-device dry-run compile times).  Parameters
+are plain nested dicts of arrays; ``abstract_params`` builds the matching
+ShapeDtypeStruct tree for allocation-free lowering; ``partition_specs``
+mirrors the tree with PartitionSpecs (see repro.dist.sharding for the
+logical rules).
+
+Mesh-divisibility: attention head counts are padded up to a multiple of the
+tensor-parallel axis (zero-initialized extra heads — mathematically inert
+but they do consume FLOPs; the roofline section reports this overhead via
+the MODEL_FLOPS/HLO_FLOPs ratio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # padding for tensor parallelism (applied by pad_for_mesh)
+    pad_heads_to: int = 0
+    pad_kv_to: int = 0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # unroll=True replaces the layer scan with a python loop — used by the
+    # dry-run's cost *calibration* passes (HLO cost analysis counts a scan
+    # body once; unrolled small-L lowerings extrapolate exactly).
+    unroll: bool = False
+    # --- beyond-paper §Perf options (baseline keeps both off) -------------
+    # chunked online-softmax attention (flash-style): never materializes the
+    # (B, H, T, T) score matrix; kv_chunk is the K/V tile length.
+    flash_attention: bool = False
+    kv_chunk: int = 1024
+    # chunked cross-entropy: computes lm_head logits + log-softmax per
+    # sequence chunk, never materializing (B, T, V) f32.
+    chunked_loss: bool = False
+    loss_chunk: int = 512
+    # §Perf H10: mesh axis names to pin the activations' batch dim to at
+    # every layer boundary (with_sharding_constraint).  Without it GSPMD can
+    # propagate a weight-stationary layout into the layer scan (batch
+    # replicated, d_model sharded) and activation temps blow up ~n_data×.
+    shard_activations: Tuple[str, ...] = ()
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def hq(self) -> int:
+        return max(self.n_heads, self.pad_heads_to)
+
+    @property
+    def hkv(self) -> int:
+        return max(self.n_kv, self.pad_kv_to)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def pad_for_mesh(self, tp: int) -> "LMConfig":
+        """Pad head counts up to a multiple of the TP degree."""
+        def up(x):
+            return int(math.ceil(x / tp) * tp) if x % tp else x
+        return dataclasses.replace(self, pad_heads_to=up(self.n_heads),
+                                   pad_kv_to=up(self.n_kv))
+
+    def n_params(self) -> int:
+        """True (unpadded) parameter count."""
+        d, v, l = self.d_model, self.vocab, self.n_layers
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv * self.head_dim * 2
+        if self.is_moe:
+            ffn = 3 * d * self.d_ff_expert * (self.n_experts + self.n_shared) \
+                + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return l * (attn + ffn + 2 * d) + 2 * v * d + d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv * self.head_dim * 2
+        ffn = 3 * d * self.d_ff_expert * (self.top_k + self.n_shared) \
+            + d * self.n_experts
+        return l * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ------------------------------------------------------------------ params
+def _layer_shapes(cfg: LMConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.head_dim
+    s: Dict[str, Tuple[int, ...]] = {
+        "ln1": (d,), "ln2": (d,),
+        "wq": (d, cfg.hq * hd), "wk": (d, cfg.hkv * hd),
+        "wv": (d, cfg.hkv * hd), "wo": (cfg.hq * hd, d),
+    }
+    if cfg.qkv_bias:
+        s |= {"bq": (cfg.hq * hd,), "bk": (cfg.hkv * hd,),
+              "bv": (cfg.hkv * hd,)}
+    if cfg.is_moe:
+        s |= {
+            "router": (d, cfg.n_experts),
+            "we1": (cfg.n_experts, d, cfg.d_ff_expert),
+            "we3": (cfg.n_experts, d, cfg.d_ff_expert),
+            "we2": (cfg.n_experts, cfg.d_ff_expert, d),
+        }
+        if cfg.n_shared:
+            ds = cfg.n_shared * cfg.d_ff_expert
+            s |= {"ws1": (d, ds), "ws3": (d, ds), "ws2": (ds, d)}
+    else:
+        s |= {"w1": (d, cfg.d_ff), "w3": (d, cfg.d_ff), "w2": (cfg.d_ff, d)}
+    return s
+
+
+def param_shapes(cfg: LMConfig) -> Dict[str, Any]:
+    l = cfg.n_layers
+    return {
+        "embed": (cfg.vocab, cfg.d_model),
+        "final_ln": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab),
+        "layers": {k: (l, *v) for k, v in _layer_shapes(cfg).items()},
+    }
+
+
+def abstract_params(cfg: LMConfig):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, cfg.dtype),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: LMConfig, key: jax.Array):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+
+    def init_one(k, shape):
+        if len(shape) == 1 or (len(shape) == 2 and shape[0] == cfg.n_layers):
+            return jnp.ones(shape, cfg.dtype)            # norms
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(fan_in)).astype(cfg.dtype)
+
+    leaves = [init_one(k, s) for k, s in zip(keys, flat)]
+    params = jax.tree.unflatten(treedef, leaves)
+    # biases start at zero; padded heads stay inert because wq/wk/wv columns
+    # beyond the true head count are zeroed below.
+    for name in ("bq", "bk", "bv"):
+        if name in params["layers"]:
+            params["layers"][name] = jnp.zeros_like(params["layers"][name])
+    hd = cfg.head_dim
+    if cfg.hq > cfg.n_heads:
+        params["layers"]["wq"] = params["layers"]["wq"].at[
+            ..., cfg.n_heads * hd:].set(0)
+        params["layers"]["wo"] = params["layers"]["wo"].at[
+            :, cfg.n_heads * hd:, :].set(0)
+    if cfg.hkv > cfg.n_kv:
+        for nm in ("wk", "wv"):
+            params["layers"][nm] = params["layers"][nm].at[
+                ..., cfg.n_kv * hd:].set(0)
+    return params
+
+
+# ------------------------------------------------------------------- layers
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x, positions, theta):
+    # x: (..., T, H, hd); positions: (..., T)
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+def _flash_attention(q, k, v, *, kv_chunk: int):
+    """Causal online-softmax attention over K/V chunks (flash-style).
+
+    Hypothesis H1 (§Perf): the baseline materializes (B, Hkv, G, T, T)
+    scores — ~T/kv_chunk × more HBM traffic than needed; streaming the KV
+    with a running (max, denom) drops the memory term by ~T/kv_chunk and
+    removes the dominant temp buffer.  Same math (exact softmax), so
+    answers are bitwise-close (f32 accumulation in both paths).
+    """
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, tq, hkv, group, hd)
+    n_chunks = tk // kv_chunk
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(tq)
+
+    def body(carry, inputs):
+        acc, m, denom = carry                   # (b,tq,hkv,g,hd),(b,tq,hkv,g)
+        ci, (kb, vb) = inputs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb).astype(jnp.float32)
+        s = s / np.sqrt(hd)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = qpos[:, None] >= kpos[None, :]   # (tq, kv_chunk)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(q.dtype), vb).astype(jnp.float32)
+        denom = denom * alpha + p.sum(axis=-1)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((b, tq, hkv, group, hd), jnp.float32)
+    m0 = jnp.full((b, tq, hkv, group), -1e30, jnp.float32)
+    d0 = jnp.zeros((b, tq, hkv, group), jnp.float32)
+    # §Perf H11: checkpoint the chunk body — otherwise autodiff saves each
+    # chunk's (b, tq, h, g, kv_chunk) probability tensor for the backward
+    # pass, resurrecting most of the memory flash attention removed.
+    (acc, m, denom), _ = jax.lax.scan(
+        jax.checkpoint(body), (acc0, m0, d0),
+        (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(b, tq, hq, hd)
+
+
+def _attention(q, k, v, *, causal: bool, q_offset=None):
+    # q: (B, Tq, Hq, hd); k/v: (B, Tk, Hkv, hd); GQA via head grouping
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, tq, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(tq)[:, None] + (0 if q_offset is None else q_offset)
+        mask = qpos >= jnp.arange(tk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, tq, hq, hd)
+
+
+def attention_block(x, layer, cfg: LMConfig, positions, cache=None,
+                    layer_idx=None):
+    """Returns (attn_out, new_cache_entry).  cache: dict with k/v
+    (B, T_max, Hkv, hd) and current length (decode path)."""
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    q = x @ layer["wq"]
+    k = x @ layer["wk"]
+    v = x @ layer["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + layer["bq"], k + layer["bk"], v + layer["bv"]
+    q = q.reshape(b, t, cfg.hq, hd)
+    k = k.reshape(b, t, cfg.hkv, hd)
+    v = v.reshape(b, t, cfg.hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.flash_attention and t % cfg.kv_chunk == 0 and t > cfg.kv_chunk:
+            out = _flash_attention(q, k, v, kv_chunk=cfg.kv_chunk)
+        else:
+            out = _attention(q, k, v, causal=True)
+        new_cache = (k, v)
+    else:
+        ck, cv, length = cache                    # (B, Tmax, Hkv, hd) ×2, int
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, length, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, length, axis=1)
+        tk = ck.shape[1]
+        # mask out positions beyond current length + t
+        scores_mask = jnp.arange(tk) < (length + t)
+        group = cfg.hq // cfg.hkv
+        qg = q.reshape(b, t, cfg.hkv, group, hd)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32)
+        scores = scores / np.sqrt(hd)
+        qpos = jnp.arange(t)[:, None] + length
+        causal = qpos >= jnp.arange(tk)[None, :]
+        scores = jnp.where((causal & scores_mask[None, :])[None, None, None],
+                           scores, -1e30)
+        probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv).reshape(b, t, cfg.hq, hd)
+        new_cache = (ck, cv)
+    return out.reshape(b, t, cfg.hq * hd) @ layer["wo"], new_cache
+
+
+def dense_ffn(x, layer):
+    return (jax.nn.silu(x @ layer["w1"]) * (x @ layer["w3"])) @ layer["w2"]
+
+
+def moe_ffn(x, layer, cfg: LMConfig):
+    """Shared experts + routed top-k with grouped sort-based dispatch.
+
+    x: (B, T, d) — each (batch) row is a dispatch group, so the sort and the
+    capacity are local to the group (and to its data shard).
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(t * k / e * cfg.capacity_factor))
+
+    logits = (x @ layer["router"]).astype(jnp.float32)       # (B, T, E)
+    gate, sel = jax.lax.top_k(logits, k)                     # (B, T, k)
+    gate = jax.nn.softmax(gate, axis=-1).astype(x.dtype)
+
+    def group_dispatch(xg, selg, gateg):
+        # xg: (T, d); selg/gateg: (T, k)
+        flat_e = selg.reshape(-1)                            # (T*k,)
+        flat_g = gateg.reshape(-1)
+        tok = jnp.arange(t * k) // k
+        order = jnp.argsort(flat_e, stable=True)
+        se, sg, stok = flat_e[order], flat_g[order], tok[order]
+        start = jnp.searchsorted(se, se, side="left")
+        pos = jnp.arange(t * k) - start                      # rank within expert
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, e * cap)      # overflow -> waste slot
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(
+            jnp.where(keep[:, None], xg[stok], 0))
+        h = buf[:e * cap].reshape(e, cap, d)
+        h = jnp.einsum("ecd,edf->ecf", h, layer["we1"])
+        h3 = jnp.einsum("ecd,edf->ecf", buf[:e * cap].reshape(e, cap, d),
+                        layer["we3"])
+        h = jax.nn.silu(h) * h3
+        out_e = jnp.einsum("ecf,efd->ecd", h, layer["we2"]).reshape(e * cap, d)
+        y = jnp.zeros((t, d), x.dtype).at[stok].add(
+            jnp.where(keep[:, None], out_e[jnp.clip(slot, 0, e * cap - 1)]
+                      * sg[:, None], 0))
+        return y
+
+    y = jax.vmap(group_dispatch)(x, sel, gate)
+    if cfg.n_shared:
+        y = y + (jax.nn.silu(x @ layer["ws1"]) * (x @ layer["ws3"])) @ layer["ws2"]
+    return y
+
+
+def _constrain(x, cfg: LMConfig):
+    if cfg.shard_activations:
+        from jax.sharding import PartitionSpec as P
+        spec = P(cfg.shard_activations, *([None] * (x.ndim - 1)))
+        try:
+            x = jax.lax.with_sharding_constraint(x, spec)
+        except (ValueError, RuntimeError):
+            pass   # no mesh in context (single-device calibration lowering)
+    return x
+
+
+def _layer_fn(x, layer, cfg: LMConfig, positions, cache=None):
+    x = _constrain(x, cfg)
+    h, new_cache = attention_block(rmsnorm(x, layer["ln1"], cfg.norm_eps),
+                                   layer, cfg, positions, cache)
+    x = x + h
+    xn = rmsnorm(x, layer["ln2"], cfg.norm_eps)
+    x = x + (moe_ffn(xn, layer, cfg) if cfg.is_moe else dense_ffn(xn, layer))
+    return _constrain(x, cfg), new_cache
+
+
+# ------------------------------------------------------------------ forward
+def forward(params, tokens, cfg: LMConfig):
+    """tokens (B, T) -> logits (B, T, vocab).  Training/prefill path."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(x, layer):
+        fn = _layer_fn
+        if cfg.remat:
+            fn = jax.checkpoint(_layer_fn, static_argnums=(2,))
+        x, _ = fn(x, layer, cfg, positions)
+        return x, None
+
+    if cfg.unroll:
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda p: p[i], params["layers"])
+            x, _ = body(x, layer)
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return (x @ params["lm_head"]).astype(jnp.float32)
+
+
+def forward_hidden(params, tokens, cfg: LMConfig):
+    """Transformer trunk without the LM head: (B, T) -> (B, T, d)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(x, layer):
+        fn = _layer_fn
+        if cfg.remat:
+            fn = jax.checkpoint(_layer_fn, static_argnums=(2,))
+        x, _ = fn(x, layer, cfg, positions)
+        return x, None
+
+    if cfg.unroll:
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda p: p[i], params["layers"])
+            x, _ = body(x, layer)
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(x, params["final_ln"], cfg.norm_eps)
+
+
+def _chunked_ce(hidden, lm_head, labels, mask, chunk: int):
+    """Hypothesis H2 (§Perf): the (B, T, V) f32 logits buffer dominates the
+    loss memory; streaming T-chunks through lm_head + log-softmax keeps only
+    (B, chunk, V) alive.  jax.checkpoint makes the bwd recompute per chunk."""
+    b, t, d = hidden.shape
+    n = t // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(h, l, m):
+        logits = (h @ lm_head).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, l[..., None], axis=-1)[..., 0]
+        return (nll * m).sum()
+
+    def body(acc, inp):
+        h, l, m = inp
+        return acc + one(h, l, m), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc))
+    return total
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if cfg.chunked_loss and labels.shape[1] % cfg.loss_chunk == 0 \
+            and labels.shape[1] > cfg.loss_chunk:
+        hidden = forward_hidden(params, batch["tokens"], cfg)
+        total = _chunked_ce(hidden, params["lm_head"], labels, mask,
+                            cfg.loss_chunk)
+        return total / jnp.maximum(mask.sum(), 1.0)
+    logits = forward(params, batch["tokens"], cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, max_len, cfg.hkv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig):
+    """One decode step: tokens (B, 1) + cache -> (logits (B, 1, V), cache).
+
+    The layer scan carries the cache slabs; the KV cache sequence axis is
+    what the decode shapes shard over the model axis (see dist.sharding).
+    """
+    b, t = tokens.shape
+    length = cache["length"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t)) + length
+
+    def body(x, scanned):
+        layer, ck, cv = scanned
+        x, (nk, nv) = _layer_fn(x, layer, cfg, positions,
+                                cache=(ck, cv, length))
+        return x, (nk, nv)
+
+    if cfg.unroll:
+        nk_list, nv_list = [], []
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda p: p[i], params["layers"])
+            x, (nk, nv) = body(x, (layer, cache["k"][i], cache["v"][i]))
+            nk_list.append(nk)
+            nv_list.append(nv)
+        nks, nvs = jnp.stack(nk_list), jnp.stack(nv_list)
+    else:
+        x, (nks, nvs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"k": nks, "v": nvs, "length": length + t}

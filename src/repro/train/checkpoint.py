@@ -1,0 +1,179 @@
+"""Lightweight fault-tolerant checkpointing (no orbax dependency).
+
+Design points for the 1000+-node story:
+
+* **atomic**: write to ``<dir>/.tmp-<step>`` then ``os.replace`` — a crash
+  mid-save never corrupts the latest checkpoint;
+* **async**: ``save_async`` snapshots device arrays to host (cheap) and does
+  the serialization on a worker thread, so the training loop keeps stepping;
+* **reshardable restore**: checkpoints store the *global* (unsharded) arrays
+  keyed by pytree path; ``restore`` device_puts onto whatever mesh/sharding
+  the *new* job provides — elastic resizes and mesh-shape changes just work
+  (see train.elastic);
+* **retention**: ``keep`` most-recent checkpoints are retained, the rest
+  garbage-collected.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, tmpl in paths:
+        key = _SEP.join(_part(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append((key, tmpl))
+    return treedef, leaves
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None):
+        self.wait()
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+        # snapshot to host memory synchronously (device buffers may change)
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                self._write(step, host, extra or {})
+            except BaseException as e:   # surfaced on next save/wait
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree, extra: dict) -> str:
+        flat = _flatten(host_tree)
+        # npz round-trips only native numpy dtypes; widen ml_dtypes (bf16,
+        # fp8) to float32 on disk — restore() casts back to the template.
+        flat = {k: (np.asarray(v, dtype=np.float32)
+                    if v.dtype.kind == "V" or v.dtype.name not in
+                    np.sctypeDict else np.asarray(v))
+                for k, v in flat.items()}
+        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat.items()})
+        meta = {"step": step, "time": time.time(), "extra": extra,
+                "keys": sorted(flat.keys())}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            # same-step overwrite: replace atomically via a rename dance
+            os.replace(os.path.join(tmp, "arrays.npz"),
+                       os.path.join(final, "arrays.npz"))
+            os.replace(os.path.join(tmp, "meta.json"),
+                       os.path.join(final, "meta.json"))
+            os.rmdir(tmp)
+        else:
+            os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            path = os.path.join(self.dir, f"step_{s:010d}")
+            for f in os.listdir(path):
+                os.unlink(os.path.join(path, f))
+            os.rmdir(path)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional pytree (matching template) of
+        ``jax.sharding.Sharding`` — arrays are placed with ``device_put``
+        onto the *current* mesh, enabling cross-mesh restores.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        treedef, keyed = _unflatten_into(template, dict(data))
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(keyed))
+        leaves = []
+        for (key, tmpl), shard in zip(keyed, shard_leaves):
+            arr = data[key]
+            want_shape = tuple(getattr(tmpl, "shape", arr.shape))
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != {want_shape}")
+            dtype = getattr(tmpl, "dtype", arr.dtype)
+            arr = jax.numpy.asarray(arr).astype(dtype)   # handles bf16 etc.
+            leaves.append(jax.device_put(arr, shard) if shard is not None
+                          else arr)
+        tree = jax.tree.unflatten(treedef, leaves)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return tree, meta

@@ -1,0 +1,114 @@
+"""AdamW + LR schedules + gradient clipping, from scratch (no optax).
+
+State is a plain pytree ``{"step", "m", "v"}`` mirroring the params tree, so
+it checkpoints/reshards with the same machinery as params and shards with
+the same partition specs (ZeRO-style: optimizer state inherits the params'
+sharding, which the configs set to fsdp+tp).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"         # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * t
+    else:
+        decay = jnp.ones(())
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  decay_mask: Optional[Any] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.ones(())
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, wd_on):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat, vhat = m / bc1, v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * wd_on * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    if decay_mask is None:
+        # default: decay matrices, not vectors/scalars (norms, biases)
+        decay_mask = jax.tree.map(lambda p: float(p.ndim >= 2), params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_d = jax.tree.leaves(decay_mask)
+    outs = [upd(p, g, m, v, d) for p, g, m, v, d in
+            zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def make_train_step(loss_fn: Callable, cfg: AdamWConfig,
+                    compressor=None) -> Callable:
+    """Generic train step: (params, opt_state, batch) -> (params, state,
+    metrics).  ``compressor`` optionally transforms grads (e.g. int8
+    quantize/dequantize with error feedback — see train.compression)."""
+
+    def step(params, opt_state, batch, comp_state=None):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compressor is not None:
+            grads, comp_state = compressor(grads, comp_state)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, cfg)
+        metrics["loss"] = loss
+        if compressor is not None:
+            return params, opt_state, comp_state, metrics
+        return params, opt_state, metrics
+
+    return step

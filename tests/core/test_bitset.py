@@ -1,0 +1,75 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(1, 300), st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < 0.4
+    assert np.array_equal(bitset.unpack(bitset.pack(mask), n), mask)
+
+
+@given(st.integers(1, 257))
+@settings(max_examples=30, deadline=None)
+def test_full_empty(n):
+    assert bitset.count(bitset.full(n)) == n
+    assert bitset.count(bitset.empty(n)) == 0
+    assert np.array_equal(bitset.to_indices(bitset.full(n), n), np.arange(n))
+
+
+def test_bit_manipulation():
+    n = 130
+    b = bitset.empty(n)
+    bitset.set_bit(b, 0)
+    bitset.set_bit(b, 63)
+    bitset.set_bit(b, 64)
+    bitset.set_bit(b, 129)
+    assert bitset.get(b, 129) and bitset.get(b, 64)
+    assert not bitset.get(b, 1)
+    bitset.clear_bit(b, 64)
+    assert not bitset.get(b, 64)
+    assert sorted(bitset.to_indices(b, n)) == [0, 63, 129]
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_set_algebra_matches_python_sets(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) < 0.3
+    b = rng.random(n) < 0.3
+    sa, sb = set(np.nonzero(a)[0]), set(np.nonzero(b)[0])
+    pa, pb = bitset.pack(a), bitset.pack(b)
+    assert set(bitset.to_indices(pa & pb, n)) == (sa & sb)
+    assert set(bitset.to_indices(pa | pb, n)) == (sa | sb)
+    assert bitset.intersect_any(pa, pb) == bool(sa & sb)
+    assert bitset.count(pa) == len(sa)
+
+
+@given(st.integers(2, 100), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_matvec_any_matches_naive(n, seed):
+    rng = np.random.default_rng(seed)
+    mat = rng.random((n, n)) < 0.2
+    vec = rng.random(n) < 0.3
+    packed = bitset.pack(mat)
+    got = bitset.matvec_any(packed, bitset.pack(vec))
+    want = (mat & vec[None, :]).any(axis=1)
+    assert np.array_equal(got, want)
+
+
+def test_union_rows_and_intersect_many():
+    rng = np.random.default_rng(0)
+    n = 150
+    mat = rng.random((10, n)) < 0.3
+    packed = bitset.pack(mat)
+    got = bitset.union_rows(packed, np.array([1, 4, 7]))
+    want = mat[[1, 4, 7]].any(axis=0)
+    assert np.array_equal(bitset.unpack(got, n), want)
+    got2 = bitset.intersect_many(packed[[0, 2, 3]])
+    want2 = mat[[0, 2, 3]].all(axis=0)
+    assert np.array_equal(bitset.unpack(got2, n), want2)

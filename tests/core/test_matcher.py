@@ -1,0 +1,109 @@
+"""End-to-end GM correctness: GM == brute force == JM == TM, across query
+types, structures, and option variants (the central soundness+completeness
+property of the whole paper pipeline)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import GM, GMOptions, match
+from repro.core.baselines import jm_match, tm_match
+from repro.core.bruteforce import answer_set, brute_force_answers
+from repro.core.graph import paper_example_graph
+from repro.core.query import CHILD, DESC, paper_example_query, query
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import (random_query_from_graph, template_queries)
+
+
+def _check(graph, q, **opts):
+    got = match(graph, q, limit=None, **opts)
+    want = answer_set(brute_force_answers(graph, q))
+    assert got.count == len(want), f"{q}"
+    if got.count <= 1_000_000:   # tuples are materialized up to this cap
+        assert answer_set(got.tuples) == want, f"{q}"
+    return got
+
+
+def test_paper_example():
+    g = paper_example_graph()
+    q = paper_example_query()
+    got = _check(g, q)
+    assert got.count > 0
+
+
+@pytest.mark.parametrize("qtype", ["C", "H", "D"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gm_matches_bruteforce_templates(qtype, seed):
+    graph = random_labeled_graph(60, avg_degree=2.2, n_labels=5, seed=seed)
+    for q in template_queries(graph, qtype=qtype, seed=seed)[:8]:
+        _check(graph, q)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["C", "H", "D"]),
+       st.integers(3, 5))
+@settings(max_examples=15, deadline=None)
+def test_gm_matches_bruteforce_random(seed, qtype, qsize):
+    # small graphs with several labels keep exhaustive answers tractable
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=5,
+                                 kind="uniform", seed=seed % 97)
+    q = random_query_from_graph(graph, n_nodes=qsize, qtype=qtype, seed=seed)
+    _check(graph, q)
+
+
+@pytest.mark.parametrize("variant", [
+    dict(sim_algo="bas"),
+    dict(sim_algo="dag"),
+    dict(sim_algo="none", use_prefilter=True),       # GM-F
+    dict(use_prefilter=True),                         # GM + prefilter
+    dict(use_transitive_reduction=False),             # GM-NR
+    dict(ordering="ri"),
+    dict(ordering="bj"),
+    dict(sim_passes=None),                            # exact fixpoint
+    dict(sim_passes=1),
+    dict(check_method="bititer"),
+])
+def test_gm_variants_all_correct(variant):
+    graph = random_labeled_graph(50, avg_degree=2.2, n_labels=4, seed=42)
+    q = random_query_from_graph(graph, n_nodes=5, qtype="H", seed=43)
+    _check(graph, q, **variant)
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=12, deadline=None)
+def test_jm_tm_gm_agree(seed):
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=4, seed=seed % 53)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=seed)
+    want = answer_set(brute_force_answers(graph, q))
+    gm = match(graph, q, limit=None)
+    jm = jm_match(graph, q)
+    tm = tm_match(graph, q)
+    assert answer_set(gm.tuples) == want
+    assert answer_set(jm.tuples) == want
+    assert answer_set(tm.tuples) == want
+
+
+def test_result_limit_truncation():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    if full.count > 5:
+        part = match(graph, q, limit=5)
+        assert part.truncated and part.count == 5
+
+
+def test_empty_answer_detected_early():
+    # a label that does not exist in the graph -> empty RIG, zero cost
+    graph = random_labeled_graph(50, avg_degree=2.0, n_labels=3, seed=5)
+    q = query(labels=[0, 99], edges=[(0, 1, CHILD)])
+    got = match(graph, q, limit=None)
+    assert got.count == 0 and got.rig_nodes >= 0
+
+
+def test_cyclic_query_handled():
+    graph = random_labeled_graph(60, avg_degree=3.0, n_labels=2, seed=6)
+    q = query(labels=[0, 1, 0],
+              edges=[(0, 1, DESC), (1, 2, DESC), (2, 0, DESC)])
+    got = match(graph, q, limit=None)
+    want = answer_set(brute_force_answers(graph, q))
+    assert answer_set(got.tuples) == want

@@ -1,0 +1,86 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bruteforce import answer_set, brute_force_answers
+from repro.core.query import CHILD, DESC, PatternQuery, QueryEdge, query
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+
+
+def test_paper_fig2_transitive_reduction():
+    # Fig. 2(a): edges 0//1? Paper: 0/1 child, 1//3, 3//2, 0//2 (redundant).
+    q = query(labels=[0, 1, 2, 3],
+              edges=[(0, 1, CHILD), (1, 3, DESC), (3, 2, DESC), (0, 2, DESC)])
+    tr = q.transitive_reduction()
+    assert QueryEdge(0, 2, DESC) not in tr.edges
+    assert QueryEdge(0, 1, CHILD) in tr.edges
+    assert len(tr.edges) == 3
+
+
+def test_full_form_ir1_ir2():
+    q = query(labels=[0, 1, 2], edges=[(0, 1, CHILD), (1, 2, DESC)])
+    ff = q.full_form()
+    # IR1+IR2: 0//2 inferable
+    assert QueryEdge(0, 2, DESC) in ff.edges
+    # child edge preserved
+    assert QueryEdge(0, 1, CHILD) in ff.edges
+
+
+def test_child_edges_never_removed():
+    q = query(labels=[0, 1, 2],
+              edges=[(0, 1, CHILD), (1, 2, CHILD), (0, 2, CHILD)])
+    tr = q.transitive_reduction()
+    assert len(tr.edges) == 3
+
+
+def test_child_path_justifies_removal():
+    q = query(labels=[0, 1, 2],
+              edges=[(0, 1, CHILD), (1, 2, CHILD), (0, 2, DESC)])
+    tr = q.transitive_reduction()
+    assert QueryEdge(0, 2, DESC) not in tr.edges
+    assert len(tr.edges) == 2
+
+
+def test_dag_decomposition_covers_edges():
+    q = query(labels=[0, 1, 2, 3],
+              edges=[(0, 1, DESC), (1, 2, DESC), (2, 0, DESC), (2, 3, CHILD)])
+    dag, back = q.dag_decomposition()
+    assert dag.is_dag()
+    assert len(dag.edges) + len(back) == q.m
+    assert set(dag.edges) | set(back) == set(q.edges)
+
+
+def test_topological_order():
+    q = query(labels=[0, 1, 2], edges=[(0, 1, CHILD), (1, 2, CHILD)])
+    assert q.topological_order() == [0, 1, 2]
+    qc = query(labels=[0, 1], edges=[(0, 1, CHILD), (1, 0, CHILD)])
+    assert qc.topological_order() is None
+    assert not qc.is_dag()
+
+
+def test_connectivity():
+    q = query(labels=[0, 1, 2], edges=[(0, 1, CHILD), (1, 2, DESC)])
+    assert q.is_connected()
+
+
+def test_dedup_child_subsumes_desc():
+    q = query(labels=[0, 1], edges=[(0, 1, CHILD), (0, 1, DESC)])
+    assert q.m == 1 and q.edges[0].kind == CHILD
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_transitive_reduction_preserves_answers(seed):
+    """§4: a query and its transitive reduction are equivalent — identical
+    answers on any data graph."""
+    graph = random_labeled_graph(30, avg_degree=1.8, n_labels=3,
+                                 kind="uniform", seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="D", seed=seed,
+                                extra_edge_prob=0.8)
+    tr = q.transitive_reduction()
+    a1 = answer_set(brute_force_answers(graph, q))
+    a2 = answer_set(brute_force_answers(graph, tr))
+    assert a1 == a2
+    assert len(tr.edges) <= len(q.edges)

@@ -1,0 +1,100 @@
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+from repro.core.graph import paper_example_graph
+from repro.core.reachability import (BFL, IntervalLabels, ReachabilityIndex,
+                                     strongly_connected_components)
+from repro.data.graphs import random_labeled_graph
+
+
+def _nx_reach(graph):
+    g = nx.DiGraph()
+    g.add_nodes_from(range(graph.n))
+    g.add_edges_from(map(tuple, graph.edges))
+    on_cycle = set()
+    for scc in nx.strongly_connected_components(g):
+        if len(scc) > 1:
+            on_cycle |= scc
+    want = np.zeros((graph.n, graph.n), dtype=bool)
+    for u in range(graph.n):
+        for v in nx.descendants(g, u):
+            want[u, v] = True
+        # ≺ includes u itself exactly when u lies on a cycle (path len >= 1)
+        if u in on_cycle or g.has_edge(u, u):
+            want[u, u] = True
+    return want
+
+
+@pytest.mark.parametrize("kind", ["uniform", "powerlaw", "dag"])
+@pytest.mark.parametrize("n", [10, 60, 150])
+def test_closure_matches_networkx(kind, n):
+    graph = random_labeled_graph(n, avg_degree=2.5, n_labels=4, kind=kind,
+                                 seed=n)
+    idx = ReachabilityIndex.build(graph)
+    assert np.array_equal(idx.dense(), _nx_reach(graph))
+
+
+@given(st.integers(2, 60), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_closure_property(n, seed):
+    graph = random_labeled_graph(n, avg_degree=2.0, n_labels=3,
+                                 kind="uniform", seed=seed)
+    idx = ReachabilityIndex.build(graph)
+    assert np.array_equal(idx.dense(), _nx_reach(graph))
+
+
+def test_scc_topological_numbering():
+    graph = random_labeled_graph(120, avg_degree=2.0, n_labels=4,
+                                 kind="uniform", seed=7)
+    comp, k = strongly_connected_components(graph)
+    # comp ids must be a valid topological order of the condensation
+    for (u, v) in graph.edges:
+        cu, cv = comp[u], comp[v]
+        if cu != cv:
+            assert cu < cv
+
+
+def test_transpose_consistency():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=4, seed=3)
+    idx = ReachabilityIndex.build(graph)
+    dense = idx.dense()
+    dense_t = bitset.unpack(idx.bits_t(), graph.n)
+    assert np.array_equal(dense_t, dense.T)
+
+
+def test_interval_labels_no_false_negatives():
+    # On DAGs: end[u] < begin[v] must imply NOT u ≺ v.
+    for seed in range(5):
+        graph = random_labeled_graph(100, avg_degree=2.5, n_labels=4,
+                                     kind="dag", seed=seed)
+        idx = ReachabilityIndex.build(graph)
+        iv = IntervalLabels.build(graph)
+        reach = idx.dense()
+        for u in range(graph.n):
+            for v in np.nonzero(reach[u])[0]:
+                assert not iv.cannot_reach(u, int(v)), (u, v)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "powerlaw", "dag"])
+def test_bfl_exactness(kind):
+    graph = random_labeled_graph(90, avg_degree=2.5, n_labels=4, kind=kind,
+                                 seed=11)
+    idx = ReachabilityIndex.build(graph)
+    bfl = BFL.build(graph, bits=128)
+    reach = idx.dense()
+    for u in range(0, graph.n, 3):
+        for v in range(0, graph.n, 3):
+            assert bfl.reaches(u, v) == reach[u, v], (u, v)
+
+
+def test_paper_example_reachability():
+    g = paper_example_graph()
+    idx = ReachabilityIndex.build(g)
+    # a1 -> b1 -> c2 -> e1 : a1 ≺ e1
+    assert idx.reaches(0, 13)
+    # e1 is a sink
+    assert not idx.dense()[13].any()

@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+from repro.core.bruteforce import brute_force_answers
+from repro.core.graph import paper_example_graph
+from repro.core.query import paper_example_query
+from repro.core.simulation import (EdgeOracle, fb_sim, fb_sim_bas, fb_sim_dag,
+                                   match_sets)
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+
+
+def _occurrence_sets(graph, q):
+    """os(q) per query node from the brute-force answer."""
+    ans = brute_force_answers(graph, q)
+    out = []
+    for i in range(q.n):
+        mask = np.zeros(graph.n, dtype=bool)
+        if len(ans):
+            mask[np.unique(ans[:, i])] = True
+        out.append(mask)
+    return out
+
+
+@pytest.mark.parametrize("algo", ["bas", "dag"])
+@pytest.mark.parametrize("method", ["binsearch", "bititer", "bitbat"])
+def test_soundness_os_subset_fb_subset_ms(algo, method):
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=1)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=2)
+    fn = fb_sim_bas if algo == "bas" else fb_sim
+    res = fn(graph, q, method=method)
+    os_ = _occurrence_sets(graph, q)
+    ms = match_sets(graph, q)
+    for i in range(q.n):
+        fb = bitset.unpack(res.fb[i], graph.n)
+        assert (~fb[~bitset.unpack(ms[i], graph.n)]).all() or \
+            not fb[~bitset.unpack(ms[i], graph.n)].any()   # FB ⊆ ms
+        assert not (os_[i] & ~fb).any(), f"os(q{i}) ⊄ FB(q{i})"  # os ⊆ FB
+
+
+@given(st.integers(0, 300))
+@settings(max_examples=15, deadline=None)
+def test_fixpoint_is_order_independent(seed):
+    """Double simulation is the unique largest relation — FBSimBas and
+    FBSim(Dag+Δ) must converge to identical fixpoints."""
+    graph = random_labeled_graph(50, avg_degree=2.2, n_labels=3, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=seed + 1)
+    r1 = fb_sim_bas(graph, q, max_passes=None, method="bitbat")
+    r2 = fb_sim(graph, q, max_passes=None, method="bitbat")
+    assert r1.converged and r2.converged
+    for a, b in zip(r1.fb, r2.fb):
+        assert np.array_equal(a, b)
+
+
+@given(st.integers(0, 300))
+@settings(max_examples=15, deadline=None)
+def test_check_methods_agree(seed):
+    graph = random_labeled_graph(50, avg_degree=2.2, n_labels=3, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=seed + 7)
+    results = [fb_sim_bas(graph, q, method=m).fb
+               for m in ("binsearch", "bititer", "bitbat")]
+    for fb in results[1:]:
+        for a, b in zip(results[0], fb):
+            assert np.array_equal(a, b)
+
+
+def test_truncated_passes_still_sound():
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=5)
+    q = random_query_from_graph(graph, n_nodes=5, qtype="H", seed=6)
+    res = fb_sim(graph, q, max_passes=1)
+    os_ = _occurrence_sets(graph, q)
+    for i in range(q.n):
+        fb = bitset.unpack(res.fb[i], graph.n)
+        assert not (os_[i] & ~fb).any()
+
+
+def test_dag_converges_in_one_pass_for_tree_patterns():
+    # §5.4: when Q is a tree, a single Dag pass reaches the fixpoint
+    # (detected at pass 2 with no change).
+    graph = random_labeled_graph(80, avg_degree=2.5, n_labels=3, seed=9)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=10,
+                                extra_edge_prob=0.0)
+    res = fb_sim_dag(graph, q, method="bitbat", use_change_flags=False)
+    assert res.converged and res.passes <= 2
+
+
+def test_paper_example_simulation_nonempty():
+    g = paper_example_graph()
+    q = paper_example_query()
+    res = fb_sim(g, q)
+    assert res.converged
+    assert all(bitset.count(b) > 0 for b in res.fb)

@@ -1,0 +1,98 @@
+"""Distributed pipeline == single-device pipeline, on 8 simulated devices.
+
+XLA fixes the device count at first jax import, so these tests run their
+body in a subprocess with ``--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def _run(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_sim_matches_single_device():
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+    from jax.sharding import Mesh
+    from repro.data.graphs import random_labeled_graph
+    from repro.data.queries import random_query_from_graph
+    from repro.jaxgm import from_host, encode_query, double_simulation
+    from repro.jaxgm.distributed import (sharded_double_simulation,
+                                         shard_graph_arrays)
+
+    g = random_labeled_graph(200, avg_degree=2.5, n_labels=4, seed=0)
+    dg = from_host(g, block=256)
+    queries = [random_query_from_graph(g, k, qtype=t, seed=s)
+               for (k, t, s) in [(4, "H", 1), (3, "C", 2)]]
+    qts = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[encode_query(q, 8, 16) for q in queries])
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mats, labels = shard_graph_arrays(dg, mesh)
+    fb_dist = np.asarray(sharded_double_simulation(mats, labels, qts, mesh,
+                                                   n_passes=4, block_k=64))
+    for i, q in enumerate(queries):
+        qt = encode_query(q, 8, 16)
+        fb_single = np.asarray(double_simulation(dg, qt, n_passes=4,
+                                                 impl="reference"))
+        assert np.array_equal(fb_dist[i], fb_single), f"query {i}"
+    print("SIM-OK")
+    """)
+
+
+def test_sharded_serve_step_and_multipod():
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.data.graphs import random_labeled_graph
+    from repro.data.queries import random_query_from_graph
+    from repro.jaxgm import from_host, encode_query, double_simulation
+    from repro.jaxgm.simulation import fb_sizes, rig_edge_counts
+    from repro.jaxgm.distributed import gm_serve_step, shard_graph_arrays
+
+    g = random_labeled_graph(200, avg_degree=2.5, n_labels=4, seed=3)
+    dg = from_host(g, block=256)
+    queries = [random_query_from_graph(g, 4, qtype="H", seed=7),
+               random_query_from_graph(g, 4, qtype="D", seed=8)]
+    qts = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[encode_query(q, 8, 16) for q in queries])
+
+    # multi-pod mesh: ("pod", "data", "model")
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mats, labels = shard_graph_arrays(dg, mesh)
+    out = gm_serve_step(mats, labels, qts, mesh, n_passes=4, top_k=64,
+                        block_k=64)
+
+    for i, q in enumerate(queries):
+        qt = encode_query(q, 8, 16)
+        fb = double_simulation(dg, qt, n_passes=4, impl="reference")
+        assert np.array_equal(np.asarray(out.fb_sizes[i]),
+                              np.asarray(fb_sizes(fb))), f"sizes q{i}"
+        want_edges = np.asarray(rig_edge_counts(dg, qt, fb, impl="reference"))
+        np.testing.assert_allclose(np.asarray(out.edge_counts[i]),
+                                   want_edges), f"edges q{i}"
+        # candidate compaction: exact when |cos| <= top_k
+        fbn = np.asarray(fb)
+        for qi in range(q.n):
+            ids = set(np.nonzero(fbn[qi])[0].tolist())
+            got = set(x for x in np.asarray(out.candidates[i, qi]).tolist()
+                      if x >= 0)
+            if len(ids) <= 64:
+                assert got == ids, f"cand q{i} node {qi}"
+    print("SERVE-OK")
+    """)

@@ -1,0 +1,151 @@
+"""Device path == host path: the central cross-implementation property."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset as hostbits
+from repro.core import match
+from repro.core.bruteforce import answer_set, brute_force_answers
+from repro.core.simulation import fb_sim
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph, template_queries
+from repro.jaxgm import (JaxGM, double_simulation, encode_query, from_host,
+                         jo_order)
+from repro.jaxgm.simulation import fb_sizes
+
+
+def _graph(seed, n=60, labels=4, deg=2.2, kind="uniform"):
+    return random_labeled_graph(n, avg_degree=deg, n_labels=labels,
+                                kind=kind, seed=seed)
+
+
+def test_initial_fb_matches_match_sets():
+    g = _graph(0)
+    q = random_query_from_graph(g, 4, qtype="H", seed=1)
+    dg = from_host(g, block=128)
+    qt = encode_query(q, 8, 16)
+    from repro.jaxgm.simulation import initial_fb
+    fb0 = np.asarray(initial_fb(dg, qt))
+    for i in range(q.n):
+        want = np.zeros(dg.n_pad, bool)
+        want[:g.n] = g.label_mask(q.labels[i])
+        assert np.array_equal(fb0[i], want)
+    assert not fb0[q.n:].any()   # padding rows empty
+
+
+@given(st.integers(0, 400), st.sampled_from(["C", "H", "D"]))
+@settings(max_examples=12, deadline=None)
+def test_device_sim_fixpoint_equals_host_fixpoint(seed, qtype):
+    g = _graph(seed % 83)
+    q = random_query_from_graph(g, 4, qtype=qtype, seed=seed)
+    host = fb_sim(g, q, max_passes=None)
+    assert host.converged
+    dg = from_host(g, block=128)
+    qt = encode_query(q, 8, 16)
+    fb = np.asarray(double_simulation(dg, qt, exact=True, impl="reference"))
+    for i in range(q.n):
+        want = hostbits.unpack(host.fb[i], g.n)
+        assert np.array_equal(fb[i, :g.n], want), f"q{i}"
+        assert not fb[i, g.n:].any()
+
+
+def test_truncated_device_sim_is_sound():
+    g = _graph(11)
+    q = random_query_from_graph(g, 5, qtype="H", seed=12)
+    ans = brute_force_answers(g, q)
+    dg = from_host(g, block=128)
+    qt = encode_query(q, 8, 16)
+    fb = np.asarray(double_simulation(dg, qt, n_passes=1, impl="reference"))
+    for i in range(q.n):
+        if len(ans):
+            occ = np.unique(ans[:, i])
+            assert fb[i, occ].all()
+
+
+@given(st.integers(0, 500), st.sampled_from(["C", "H", "D"]),
+       st.integers(3, 5))
+@settings(max_examples=15, deadline=None)
+def test_jaxgm_count_equals_host_gm(seed, qtype, qsize):
+    g = _graph(seed % 71, n=50, labels=5)
+    q = random_query_from_graph(g, qsize, qtype=qtype, seed=seed)
+    host = match(g, q, limit=None)
+    jgm = JaxGM(g, block=128, capacity=8192, exact_sim=True, impl="reference")
+    dev = jgm.match(q)
+    if dev.overflowed:
+        # dense queries may exceed the frontier capacity — the designed
+        # outcome is a truthful overflow flag (serving falls back to the
+        # host enumerator), not a wrong count.
+        assert host.count > 8192
+    else:
+        assert dev.count == host.count
+
+
+def test_jaxgm_materialized_tuples_match_bruteforce():
+    g = _graph(3, n=40, labels=5)
+    q = random_query_from_graph(g, 4, qtype="H", seed=4)
+    want = answer_set(brute_force_answers(g, q))
+    jgm = JaxGM(g, block=128, capacity=8192, exact_sim=True, impl="reference")
+    dev = jgm.match(q, materialize=True)
+    assert not dev.overflowed
+    got = set(map(tuple, dev.tuples))
+    assert got == want
+
+
+def test_jaxgm_batch_vmap_matches_single():
+    g = _graph(5, n=50, labels=4)
+    queries = [random_query_from_graph(g, k, qtype=t, seed=s)
+               for (k, t, s) in [(3, "C", 1), (4, "H", 2), (4, "D", 3),
+                                 (5, "H", 4)]]
+    jgm = JaxGM(g, block=128, capacity=8192, exact_sim=True, impl="reference")
+    singles = [jgm.match(q).count for q in queries]
+    batch = [r.count for r in jgm.match_batch(queries)]
+    assert singles == batch
+
+
+def test_overflow_flag_raised_on_tiny_capacity():
+    g = _graph(6, n=60, labels=2, deg=3.0)
+    q = random_query_from_graph(g, 4, qtype="D", seed=7)
+    host = match(g, q, limit=None)
+    jgm = JaxGM(g, block=128, capacity=8, exact_sim=True, impl="reference")
+    dev = jgm.match(q)
+    if host.count > 8:
+        assert dev.overflowed
+
+
+def test_closure_on_device_matches_host():
+    g = _graph(8, n=70)
+    jgm_host = JaxGM(g, block=128, impl="reference")
+    jgm_dev = JaxGM(g, block=128, impl="reference", closure_on_device=True)
+    assert np.array_equal(np.asarray(jgm_host.dg.reach),
+                          np.asarray(jgm_dev.dg.reach))
+
+
+def test_jo_order_prefers_small_sets_and_connectivity():
+    g = _graph(9)
+    q = random_query_from_graph(g, 5, qtype="H", seed=10)
+    qt = encode_query(q, 8, 16)
+    sizes = jnp.asarray([5, 1, 7, 3, 2, 0, 0, 0], jnp.int32)
+    order = np.asarray(jo_order(qt, sizes))[:q.n]
+    assert sorted(order.tolist()) == list(range(q.n))
+    assert order[0] == int(np.argmin(np.asarray(sizes)[:q.n]))
+    # every subsequent node touches the prefix (q is connected)
+    for i in range(1, q.n):
+        prefix = set(order[:i].tolist())
+        assert any(nb in prefix for nb in q.neighbors(int(order[i])))
+
+
+def test_rig_stats_match_host_rig():
+    from repro.core.rig import build_rig
+    g = _graph(13, n=50)
+    q = random_query_from_graph(g, 4, qtype="H", seed=14)
+    qr = q.transitive_reduction()
+    jgm = JaxGM(g, block=128, exact_sim=True, impl="reference")
+    sizes, edge_counts = jgm.rig_stats(q)
+    rig = build_rig(g, qr, sim_passes=None)
+    assert list(sizes) == [rig.cos_size(i) for i in range(qr.n)]
+    host_edges = [sum(int(np.bitwise_count(r).sum()) for r in rig.fwd[e].values())
+                  for e in range(qr.m)]
+    assert list(edge_counts) == host_edges

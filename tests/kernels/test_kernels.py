@@ -1,0 +1,146 @@
+"""Pallas kernel correctness sweeps (interpret mode) vs the ref.py oracles.
+
+Every kernel is exercised across shapes (including tile-boundary and
+non-square cases), densities and block sizes; results are exact-integer /
+boolean so assertions are equality, not allclose-with-tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, packed, ref
+from repro.kernels.bitmm import bitmm_pallas
+from repro.kernels.closure import closure_step_pallas
+from repro.kernels.intersect import intersect_pallas
+
+
+def _rand_packed(rng, m, k, density=0.2):
+    dense = rng.random((m, k)) < density
+    words = np.asarray(packed.pack(jnp.asarray(dense)))
+    return dense, jnp.asarray(words)
+
+
+# ------------------------------------------------------------------- packed
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 255, 1024])
+def test_pack_unpack_roundtrip(n):
+    rng = np.random.default_rng(n)
+    mask = jnp.asarray(rng.random((3, n)) < 0.3)
+    words = packed.pack(mask)
+    assert words.dtype == jnp.uint32
+    out = packed.unpack(words, n)
+    assert np.array_equal(np.asarray(out), np.asarray(mask))
+
+
+def test_popcount():
+    words = jnp.asarray([[0, 1, 3, 0xFFFFFFFF]], dtype=jnp.uint32)
+    assert int(packed.popcount(words).sum()) == 0 + 1 + 2 + 32
+
+
+def test_u64_u32_bridge():
+    from repro.core import bitset as hb
+    rng = np.random.default_rng(0)
+    mask = rng.random(300) < 0.4
+    w64 = hb.pack(mask)
+    w32 = packed.pack_numpy_u64_to_u32(w64)
+    got = packed.unpack(jnp.asarray(w32), 300)
+    assert np.array_equal(np.asarray(got), mask)
+
+
+# -------------------------------------------------------------------- bitmm
+@pytest.mark.parametrize("m,k,b", [(128, 256, 8), (256, 1024, 16),
+                                   (512, 2048, 4), (128, 128, 128)])
+@pytest.mark.parametrize("threshold", [True, False])
+def test_bitmm_pallas_vs_ref(m, k, b, threshold):
+    rng = np.random.default_rng(m + k + b)
+    dense, words = _rand_packed(rng, m, k)
+    x = jnp.asarray(rng.random((k, b)) < 0.3, dtype=jnp.float32)
+    want = ref.bitmm_ref(words, x, threshold=threshold)
+    got = bitmm_pallas(words, x, threshold=threshold, bm=128, bk=128,
+                       interpret=True)
+    if threshold:
+        assert np.array_equal(np.asarray(got) > 0, np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bk", [(64, 64), (128, 256), (256, 1024)])
+def test_bitmm_block_shapes(bm, bk):
+    rng = np.random.default_rng(bm * bk)
+    m, k, b = 256, 1024, 8
+    dense, words = _rand_packed(rng, m, k, density=0.05)
+    x = jnp.asarray(rng.random((k, b)) < 0.5, dtype=jnp.float32)
+    want = ref.bitmm_ref(words, x)
+    got = bitmm_pallas(words, x, bm=bm, bk=bk, interpret=True)
+    assert np.array_equal(np.asarray(got) > 0, np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["blocked", "reference"])
+def test_bitmm_impls_agree(impl):
+    rng = np.random.default_rng(7)
+    m, k, b = 128, 512, 8
+    _, words = _rand_packed(rng, m, k)
+    x = jnp.asarray(rng.random((k, b)) < 0.4, dtype=jnp.float32)
+    want = np.asarray(ref.bitmm_ref(words, x))
+    got = np.asarray(ops.bitmm(words, x, impl=impl))
+    assert np.array_equal(got, want)
+
+
+def test_bitmm_empty_and_full():
+    m, k, b = 128, 256, 8
+    zero = jnp.zeros((m, k // 32), jnp.uint32)
+    ones = jnp.full((m, k // 32), 0xFFFFFFFF, jnp.uint32)
+    x = jnp.ones((k, b), jnp.float32)
+    assert not np.asarray(bitmm_pallas(zero, x, interpret=True)).any()
+    got = np.asarray(bitmm_pallas(ones, x, threshold=False, interpret=True))
+    np.testing.assert_allclose(got, k)
+
+
+# ------------------------------------------------------------------ closure
+@pytest.mark.parametrize("n", [128, 256, 512])
+def test_closure_step_vs_ref(n):
+    rng = np.random.default_rng(n)
+    _, words = _rand_packed(rng, n, n, density=0.02)
+    want = np.asarray(ref.closure_step_ref(words))
+    got = np.asarray(closure_step_pallas(words, bm=128, bn=128, bk=128,
+                                         interpret=True))
+    assert np.array_equal(got, want)
+
+
+def test_full_closure_matches_host_reachability():
+    from repro.core.reachability import ReachabilityIndex
+    from repro.data.graphs import random_labeled_graph
+    from repro.kernels import packed as pk
+
+    graph = random_labeled_graph(100, avg_degree=2.5, n_labels=3, seed=3)
+    n_pad = 128
+    dense = np.zeros((n_pad, n_pad), dtype=bool)
+    dense[:graph.n, :graph.n] = graph.adjacency_matrix()
+    words = pk.pack(jnp.asarray(dense))
+    closed = ops.transitive_closure(words, impl="reference")
+    got = np.asarray(pk.unpack(closed, n_pad))[:graph.n, :graph.n]
+    want = ReachabilityIndex.build(graph).dense()
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------- intersect
+@pytest.mark.parametrize("f,k,w", [(128, 2, 16), (256, 4, 64), (128, 1, 128)])
+def test_intersect_pallas_vs_ref(f, k, w):
+    rng = np.random.default_rng(f + k + w)
+    rows = jnp.asarray(
+        rng.integers(0, 2**32, size=(f, k, w), dtype=np.uint64).astype(np.uint32))
+    want_rows, want_counts = ref.intersect_ref(rows)
+    got_rows, got_counts = intersect_pallas(rows, bf=128, bw=16, interpret=True)
+    assert np.array_equal(np.asarray(got_rows), np.asarray(want_rows))
+    assert np.array_equal(np.asarray(got_counts), np.asarray(want_counts))
+
+
+def test_intersect_disjoint_rows_count_zero():
+    f, w = 128, 16
+    a = np.zeros((f, 2, w), dtype=np.uint32)
+    a[:, 0] = 0xAAAAAAAA
+    a[:, 1] = 0x55555555
+    got_rows, got_counts = intersect_pallas(jnp.asarray(a), interpret=True)
+    assert not np.asarray(got_rows).any()
+    assert not np.asarray(got_counts).any()

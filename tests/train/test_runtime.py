@@ -1,0 +1,218 @@
+"""Training-runtime tests: optimizer, checkpointing, compression, elastic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (AdamWConfig, Checkpointer, ElasticConfig,
+                         ElasticTrainer, SimulatedFailure, compression_ratio,
+                         make_int8_compressor)
+from repro.train import optimizer as opt
+from repro.train.compression import init_error_state
+
+
+# ----------------------------------------------------------------- optimizer
+def test_adamw_matches_analytic_first_step():
+    # On the first step AdamW moves each coord by ~lr * sign(grad) (bias
+    # correction makes mhat/sqrt(vhat) == sign for any gradient).
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0,
+                      warmup_steps=0, schedule="constant")
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.5, -0.25, 2.0])}
+    state = opt.init_state(params)
+    new, state, m = opt.apply_updates(params, grads, state, cfg)
+    np.testing.assert_allclose(
+        np.asarray(new["w"]),
+        np.asarray(params["w"]) - 0.1 * np.sign(np.asarray(grads["w"])),
+        rtol=1e-4)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant")
+    target = jnp.asarray(np.linspace(-2, 2, 16), jnp.float32)
+    params = {"w": jnp.zeros(16)}
+    state = opt.init_state(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - target))
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip_and_schedule():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=10,
+                      total_steps=100, schedule="cosine")
+    s0 = opt.schedule_lr(cfg, jnp.asarray(1))
+    s_mid = opt.schedule_lr(cfg, jnp.asarray(10))
+    s_end = opt.schedule_lr(cfg, jnp.asarray(100))
+    assert float(s0) < float(s_mid)
+    assert float(s_end) <= float(s_mid)
+    assert float(s_end) >= cfg.lr * cfg.min_lr_ratio * 0.99
+
+
+# ---------------------------------------------------------------- checkpoint
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((4, 5)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.integers(0, 9, 7), jnp.int32),
+                       "c": jnp.asarray(rng.standard_normal(3), jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree(1)
+    ck.save(10, tree, extra={"note": "x"})
+    restored, meta = ck.restore(tree)
+    assert meta["step"] == 10 and meta["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree(2)
+    ck.save_async(5, tree)
+    ck.wait()
+    restored, meta = ck.restore(tree)
+    assert meta["step"] == 5
+    # no stray tmp dirs
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_checkpoint_restore_with_sharding(tmp_path):
+    # single-device "resharding": restore with explicit shardings
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(3)
+    ck.save(1, tree)
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    restored, _ = ck.restore(tree, shardings=shardings)
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ck.restore({"a": jnp.zeros((3, 3))})
+
+
+# --------------------------------------------------------------- compression
+def test_int8_quantization_error_bounded():
+    comp = make_int8_compressor(block=64)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((130,)), jnp.float32)}
+    out, err = comp(g, None)
+    # elementwise error bounded by scale/2 = max|block|/254
+    rel = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
+    assert rel <= np.abs(np.asarray(g["w"])).max() / 127.0 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    # constant gradient: with error feedback the *average* applied update
+    # converges to the true gradient
+    comp = make_int8_compressor(block=32)
+    g = {"w": jnp.asarray(np.full(64, 0.0123), jnp.float32)}
+    err = None
+    total = np.zeros(64)
+    n = 50
+    for _ in range(n):
+        out, err = comp(g, err)
+        total += np.asarray(out["w"])
+    np.testing.assert_allclose(total / n, 0.0123, rtol=1e-2)
+
+
+def test_training_converges_with_compression():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant")
+    comp = make_int8_compressor(block=32)
+    target = jnp.asarray(np.linspace(-1, 1, 32), jnp.float32)
+    params = {"w": jnp.zeros(32)}
+    state = opt.init_state(params)
+    err = init_error_state(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - target))
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        g, err = comp(g, err)
+        params, state, _ = opt.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_compression_ratio_about_8x():
+    params = {"w": jnp.zeros((1024, 64))}
+    r = compression_ratio(params, block=256)
+    assert 0.25 < r < 0.27       # 1/4 of fp32 bytes + scale overhead
+
+
+# ------------------------------------------------------------------ elastic
+def _make_trainer(tmp_path, ckpt_every=5, lr=0.05):
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant")
+    target = jnp.asarray(np.linspace(-1, 1, 8), jnp.float32)
+
+    def init_state():
+        params = {"w": jnp.zeros(8)}
+        return {"params": params, "opt": opt.init_state(params)}
+
+    def loss(p, batch):
+        return jnp.sum(jnp.square(p["w"] - target)) + 0.0 * batch.sum()
+
+    @jax.jit
+    def step(state, batch):
+        g = jax.grad(loss)(state["params"], batch)
+        params, ostate, m = opt.apply_updates(state["params"], g,
+                                              state["opt"], cfg)
+        return {"params": params, "opt": ostate}, m
+
+    return ElasticTrainer(
+        step_fn=step,
+        make_batch=lambda i: jnp.asarray([float(i)]),
+        init_state=init_state,
+        cfg=ElasticConfig(checkpoint_dir=str(tmp_path),
+                          checkpoint_every=ckpt_every, async_save=False),
+        get_step=lambda s: int(s["opt"]["step"]))
+
+
+def test_elastic_restart_reaches_same_result(tmp_path):
+    # uninterrupted run
+    t1 = _make_trainer(tmp_path / "a")
+    t1.start_or_resume()
+    r1 = t1.run(20)
+    w_straight = np.asarray(t1.state["params"]["w"])
+
+    # interrupted at step 10, resumed by a fresh trainer
+    t2 = _make_trainer(tmp_path / "b")
+    t2.start_or_resume()
+    with pytest.raises(SimulatedFailure):
+        t2.run(20, fail_at=10)
+    t3 = _make_trainer(tmp_path / "b")
+    info = t3.start_or_resume()
+    assert info["resumed"] and info["step"] == 10
+    t3.run(20)
+    w_resumed = np.asarray(t3.state["params"]["w"])
+    np.testing.assert_allclose(w_resumed, w_straight, rtol=1e-5, atol=1e-6)
+
+
+def test_straggler_journal_flags_slow_steps():
+    from repro.train.elastic import StepJournal
+    j = StepJournal()
+    for i in range(20):
+        j.record(i, 0.01, factor=3.0)
+    assert j.record(99, 0.2, factor=3.0)
+    assert 99 in j.flags
