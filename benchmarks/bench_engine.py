@@ -1,0 +1,124 @@
+"""Engine benchmark: cold-vs-warm cache latency + planner throughput.
+
+Measures what the ``repro.engine`` subsystem buys over driving the matcher
+core directly:
+
+* **cold vs warm** — first query on a freshly resident graph pays label
+  construction (reachability closure, packed adjacency, interval labels)
+  and planning; repeat queries hit both caches.  Warm latency must be
+  strictly below cold (the acceptance criterion for the label cache).
+* **planner vs fixed backend** — a mixed workload executed (a) with the
+  planner choosing per query, (b) forced onto the host matcher.  (A forced
+  device run is informative on real accelerators; under quick/CPU mode the
+  jit cost swamps it, so it is gated behind --full.)
+
+Standalone run writes the machine-readable baseline ``BENCH_engine.json``:
+
+  PYTHONPATH=src python -m benchmarks.bench_engine [--full] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+from repro.data.graphs import random_labeled_graph
+from repro.engine import Engine, EngineOptions
+
+from .common import Row, bench_queries
+
+
+def _fresh_engine(n, seed=0, **opts):
+    g = random_labeled_graph(n, avg_degree=3.0, n_labels=8, seed=seed)
+    defaults = dict(materialize=False, device_min_nodes=10**9)
+    defaults.update(opts)
+    return Engine(g, options=EngineOptions(**defaults)), g
+
+
+def _time_one(eng, q) -> float:
+    t0 = time.perf_counter()
+    eng.execute(q)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 1000 if quick else 10_000
+    rows: List[Row] = []
+
+    # ---- cold vs warm cache latency -------------------------------------
+    eng, g = _fresh_engine(n)
+    text = "(a:L0)-/->(b:L1)-//->(c:L2)"
+    cold_s = _time_one(eng, text)
+    warm_runs = [_time_one(eng, text) for _ in range(5)]
+    warm_s = sorted(warm_runs)[len(warm_runs) // 2]
+    ctx = eng.context()
+    assert ctx.label_builds == 1, "warm path must not rebuild labels"
+    assert warm_s < cold_s, "warm latency must be strictly below cold"
+    rows.append(Row("engine_cold_query", cold_s * 1e6,
+                    {"graph_nodes": n, "label_build_ms":
+                     round(ctx.label_build_s * 1e3, 2)}))
+    rows.append(Row("engine_warm_query", warm_s * 1e6,
+                    {"graph_nodes": n,
+                     "speedup": round(cold_s / warm_s, 1)}))
+
+    # warm with *isomorphic* (renamed) queries: plan cache by canonical form
+    iso = "(y:L1)-//->(z:L2), (x:L0)-/->(y)"
+    iso_s = _time_one(eng, iso)
+    r = eng.execute(iso)
+    assert r.stats.plan_cache_hit
+    rows.append(Row("engine_warm_isomorphic", iso_s * 1e6,
+                    {"plan_cache_hit": True}))
+
+    # ---- planner vs fixed backend throughput ----------------------------
+    workload = bench_queries(
+        random_labeled_graph(n, avg_degree=3.0, n_labels=8, seed=0),
+        qtype="H", n=6 if quick else 12, seed=0)
+    modes = {"planner": {}, "fixed_host": {"force_backend": "host"}}
+    if not quick:
+        modes["fixed_device"] = {"force_backend": "device",
+                                 "device_impl": "reference",
+                                 "device_min_nodes": 0}
+    for mode, opts in modes.items():
+        eng, _ = _fresh_engine(n, **opts)
+        eng.execute(workload[0])          # absorb cold label build
+        t0 = time.perf_counter()
+        results = eng.execute_many(workload)
+        dt = time.perf_counter() - t0
+        qps = len(workload) / dt
+        backends = {}
+        for res in results:
+            backends[res.stats.backend] = backends.get(res.stats.backend,
+                                                       0) + 1
+        rows.append(Row(f"engine_many_{mode}", dt / len(workload) * 1e6,
+                        {"qps": round(qps, 1), "queries": len(workload),
+                         **{f"exec_{k}": v for k, v in backends.items()}}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+
+    rows = run(quick=not args.full)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    payload = {
+        "bench": "engine",
+        "mode": "full" if args.full else "quick",
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 1),
+                  "derived": r.derived} for r in rows],
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """End-to-end driver (the paper's kind is a query engine → serving):
-batched pattern-query serving with journaling, failure re-dispatch and
-straggler splitting.
+batched pattern-query serving through the engine, with journaling, failure
+re-dispatch and straggler splitting.  Requests are submitted as query text
+— the server parses, plans and caches across the whole workload.
 
   PYTHONPATH=src python examples/serve_queries.py
 """
@@ -16,6 +17,10 @@ def main():
     server = QueryServer(graph, batch_size=6, capacity=4096,
                          deadline_s=120.0)
 
+    # textual queries go through the engine's parser at admission
+    assert server.submit(100, "(x:L0)-/->(y:L1), (x)-//->(z:L2)")
+    assert not server.submit(101, "(x:L0)-/=>(y:L1)")     # rejected: typo
+    print(f"rejected q101:\n{server.rejected[101]}")
     for i in range(12):
         q = random_query_from_graph(graph, 3 + i % 2,
                                     qtype=["C", "H", "D"][i % 3], seed=i)
@@ -27,10 +32,12 @@ def main():
 
     done = [r for r in server.journal.values() if r.done]
     print(f"served {len(done)}/{len(server.journal)}   stats={server.stats}")
+    print(f"engine caches: {server.engine.cache_info()}")
     for r in list(server.journal.values())[:8]:
-        print(f"  q{r.rid}: count={r.count} attempts={r.attempts} "
-              f"overflow={r.overflowed}")
+        print(f"  q{r.rid}: count={r.count} backend={r.backend} "
+              f"attempts={r.attempts} overflow={r.overflowed}")
     assert all(r.done for r in server.journal.values())
+    assert server.stats["rejected"] == 1
     print("all requests served despite injected failure ✓")
 
 

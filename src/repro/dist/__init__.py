@@ -1,0 +1,5 @@
+# Distribution helpers shared by the config/dry-run framework: the
+# PartitionSpec conventions for every model family live in ``sharding``.
+from . import sharding
+
+__all__ = ["sharding"]

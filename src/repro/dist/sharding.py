@@ -1,0 +1,122 @@
+"""PartitionSpec conventions for the production meshes.
+
+Meshes come from ``repro.launch.mesh``: ``("data", "model")`` per pod, with
+a leading ``"pod"`` axis across pods.  The conventions here:
+
+* **batch axes** — activations/batches shard their leading dimension over
+  every data-parallel axis present (``("pod", "data")`` ∩ mesh axes);
+  parameters are replicated across pods.
+* **LM params** — Megatron-style tensor parallelism over ``"model"``
+  (column-parallel in-projections, row-parallel out-projections, vocab
+  -sharded embedding/lm_head) combined with FSDP-style sharding of the
+  other weight dimension over ``"data"``.  Per-layer weights are stacked
+  with a leading ``n_layers`` dim, which is never sharded (it is scanned).
+  ``configs.base`` overrides the kv projections when GQA head padding does
+  not divide the TP degree.
+* **GNN params** — small MLPs: replicated; batches shard nodes/edges.
+* **DIN params** — the embedding tables are the big tensors: row-sharded
+  over ``"model"``; the attention/output MLPs are tiny and replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["batch_axes", "lm_param_specs", "lm_batch_specs",
+           "gnn_param_specs", "gnn_batch_specs",
+           "din_param_specs", "din_batch_specs"]
+
+
+def batch_axes(mesh: Mesh):
+    """Data-parallel mesh axes, as one PartitionSpec entry for the leading
+    batch/node dimension: ("pod", "data") restricted to the mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _is_shape(x) -> bool:
+    return isinstance(x, tuple)
+
+
+# ------------------------------------------------------------------ LM (TP)
+def lm_param_specs(cfg, mesh: Mesh) -> Dict[str, Any]:
+    """Specs mirroring ``models.transformer.param_shapes``.
+
+    Column-parallel (out-dim over "model", in-dim over "data"): wq/wk/wv,
+    w1/w3 and shared-expert in-projections; row-parallel (in-dim over
+    "model", out-dim over "data"): wo, w2.  Vocab dims shard over "model".
+    Norms and the router replicate; biases follow their projection's
+    out-dim.  The leading stacked-layer dim stays unsharded.
+    """
+    col = P(None, "data", "model")          # (layer, in, out): out-parallel
+    row = P(None, "model", "data")          # (layer, in, out): in-parallel
+    layer_specs: Dict[str, P] = {
+        "ln1": P(None, None), "ln2": P(None, None),
+        "wq": col, "wk": col, "wv": col, "wo": row,
+        "bq": P(None, "model"), "bk": P(None, "model"),
+        "bv": P(None, "model"),
+        "w1": col, "w3": col, "w2": row,
+        # MoE: experts replicate over the mesh (the dry-run measures the
+        # dense shards; expert parallelism is an open item)
+        "router": P(None, None, None),
+        "we1": P(None, None, "data", "model"),
+        "we3": P(None, None, "data", "model"),
+        "we2": P(None, None, "model", "data"),
+        "ws1": col, "ws3": col, "ws2": row,
+    }
+    import repro.models.transformer as tf_mod
+
+    shapes = tf_mod.param_shapes(cfg)
+    layers = {k: layer_specs.get(k, P(*([None] * len(v))))
+              for k, v in shapes["layers"].items()}
+    return {
+        "embed": P("model", None),          # vocab-sharded
+        "final_ln": P(None),
+        "lm_head": P(None, "model"),        # vocab-sharded output
+        "layers": layers,
+    }
+
+
+def lm_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    baxes = batch_axes(mesh)
+    return {"tokens": P(baxes, None), "labels": P(baxes, None)}
+
+
+# ---------------------------------------------------------------------- GNN
+def gnn_param_specs(cfg, mesh: Mesh):
+    """GNN weights are small — replicate everything (structure mirrors
+    ``models.gnn.param_shapes``)."""
+    import repro.models.gnn as gnn_mod
+
+    return jax.tree.map(lambda s: P(*([None] * len(s))),
+                        gnn_mod.param_shapes(cfg), is_leaf=_is_shape)
+
+
+def gnn_batch_specs(mesh: Mesh, batch) -> Dict[str, P]:
+    """Node/edge arrays shard their leading dimension over the batch axes
+    (padded upstream to multiples of 512, see ``configs.base``)."""
+    baxes = batch_axes(mesh)
+    return {k: P(baxes, *([None] * (len(v.shape) - 1)))
+            for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------- DIN
+def din_param_specs(cfg, mesh: Mesh):
+    """Embedding tables row-shard over "model"; the MLPs replicate."""
+    import repro.models.recsys as din_mod
+
+    def spec(name: str, shape) -> P:
+        if name.endswith("_table"):
+            return P("model", *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    shapes = din_mod.param_shapes(cfg)
+    return {k: spec(k, v) for k, v in shapes.items()}
+
+
+def din_batch_specs(mesh: Mesh, batch) -> Dict[str, P]:
+    baxes = batch_axes(mesh)
+    return {k: P(baxes, *([None] * (len(v.shape) - 1)))
+            for k, v in batch.items()}

@@ -1,0 +1,20 @@
+# The query-facing engine subsystem in front of the RIG/MJoin core: a
+# textual hybrid-pattern query language (parser + pretty-printer), a
+# statistics-driven planner choosing backend / simulation algorithm / check
+# method per query, and an Engine facade with cross-query caches (per-graph
+# reachability/interval labels, LRU plan + RIG-stats cache) and batched
+# execution.
+from .cache import GraphContext, LRUCache
+from .canonical import canonical_form, canonical_key
+from .engine import Engine, EngineOptions, EngineResult, EngineStats
+from .language import QueryParseError, Vocab, fmt, parse
+from .planner import DeviceCaps, Plan, Planner
+from .stats import GraphStats, RigStats
+
+__all__ = [
+    "Engine", "EngineOptions", "EngineResult", "EngineStats",
+    "Vocab", "QueryParseError", "parse", "fmt",
+    "canonical_form", "canonical_key",
+    "Plan", "Planner", "DeviceCaps",
+    "GraphStats", "RigStats", "GraphContext", "LRUCache",
+]

@@ -1,0 +1,114 @@
+"""Cross-query caches: per-graph label structures + LRU plan cache.
+
+The paper's key property is that the RIG is *runtime* state — built per
+query, never persisted.  What IS worth persisting across queries are the
+graph-side artifacts every query re-uses:
+
+* the reachability labeling (SCC condensation + packed closure — the BFL
+  stand-in of §7.1) and its transpose,
+* the packed adjacency bit-matrices (both directions),
+* DFS interval labels (§5.5 early expansion termination),
+* graph statistics for the planner.
+
+``GraphContext`` owns those for one resident graph and builds them exactly
+once (``label_builds`` counts constructions so tests and benchmarks can
+prove the warm path skips them).  ``LRUCache`` is the generic bounded map
+used for the plan / RIG-stats cache keyed by canonical query form.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Hashable, Optional
+
+from ..core.graph import DataGraph
+from ..core.reachability import IntervalLabels
+from ..core.simulation import EdgeOracle
+from .stats import GraphStats
+
+__all__ = ["LRUCache", "GraphContext"]
+
+
+class LRUCache:
+    """Bounded least-recently-used map with hit/miss/eviction counters."""
+
+    def __init__(self, capacity: int = 256):
+        assert capacity > 0
+        self.capacity = capacity
+        self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return default
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._d
+
+    def drop_where(self, pred) -> int:
+        """Remove entries whose key matches ``pred``; returns the count."""
+        dead = [k for k in self._d if pred(k)]
+        for k in dead:
+            del self._d[k]
+        return len(dead)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
+@dataclass
+class GraphContext:
+    """Per-resident-graph state: label structures, statistics, matchers.
+
+    ``ensure_labels()`` builds the reachability labeling, packed adjacency
+    and interval labels on first call and is a no-op afterwards; the engine
+    calls it on every execution and reports the hit/miss in per-query stats.
+    """
+
+    graph: DataGraph
+    stats: GraphStats = field(init=False)
+    oracle: Optional[EdgeOracle] = field(default=None, init=False)
+    intervals: Optional[IntervalLabels] = field(default=None, init=False)
+    label_builds: int = field(default=0, init=False)
+    label_build_s: float = field(default=0.0, init=False)
+
+    def __post_init__(self) -> None:
+        self.stats = GraphStats.collect(self.graph)
+
+    @property
+    def labels_ready(self) -> bool:
+        return self.oracle is not None
+
+    def ensure_labels(self) -> bool:
+        """Build the per-graph label structures once.  Returns ``True`` when
+        they were already resident (a label-cache hit)."""
+        if self.labels_ready:
+            return True
+        t0 = time.perf_counter()
+        self.oracle = EdgeOracle(self.graph)    # builds ReachabilityIndex
+        self.oracle._reach.bits_t()             # ancestor rows (backward sim)
+        self.graph.adj_bits()
+        self.graph.adj_bits_t()
+        self.intervals = IntervalLabels.build(self.graph)
+        self.label_builds += 1
+        self.label_build_s += time.perf_counter() - t0
+        return False

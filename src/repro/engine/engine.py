@@ -1,0 +1,428 @@
+"""``Engine`` — the query-facing facade over the RIG/MJoin core.
+
+Pipeline per query::
+
+    text ──parse──▶ PatternQuery ──TR+canonicalize──▶ key
+         ──plan-cache──▶ Plan (backend, sim algo, check method, ordering)
+         ──label-cache──▶ resident reachability/adjacency/interval labels
+         ──execute──▶ host GM  or  device JaxGM (batched in execute_many)
+
+Cross-query state (everything the paper's per-query pipeline would
+otherwise recompute):
+
+* **label cache** — one :class:`GraphContext` per resident graph holds the
+  reachability labeling, packed adjacency and DFS interval labels; built
+  once, shared by every subsequent query on that graph;
+* **plan / RIG-stats cache** — an LRU keyed by the canonical form of the
+  transitively-reduced query; repeat queries skip planning and are
+  re-planned against *observed* RIG sizes (tiny RIG -> host enumeration).
+
+The RIG itself remains runtime state, rebuilt per query — the paper's
+defining property; the engine only hoists the graph-side indexes and the
+per-query *decisions* out of the hot path.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+import warnings
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.graph import DataGraph
+from ..core.matcher import GM, MatchResult
+from ..core.mjoin import DEFAULT_LIMIT
+from ..core.query import PatternQuery
+from .cache import GraphContext, LRUCache
+from .canonical import canonical_key
+from .language import Vocab, fmt, parse
+from .planner import DEVICE, HOST, DeviceCaps, Plan, Planner
+from .stats import RigStats
+
+__all__ = ["EngineOptions", "EngineStats", "EngineResult", "Engine"]
+
+QueryLike = Union[str, PatternQuery]
+
+
+@dataclass
+class EngineOptions:
+    # device matcher caps (see DeviceCaps)
+    max_q: int = 8
+    max_e: int = 16
+    capacity: int = 4096
+    device_min_nodes: int = 512
+    device_impl: str = "auto"          # jaxgm kernel impl: auto|reference|...
+    exact_sim: bool = True             # device sim to fixpoint (host-equal)
+    # engine knobs
+    plan_cache_size: int = 256
+    max_resident_graphs: int = 8
+    force_backend: Optional[str] = None   # "host" | "device" | None
+    limit: Optional[int] = DEFAULT_LIMIT
+    materialize: bool = True
+
+    def caps(self) -> DeviceCaps:
+        return DeviceCaps(max_q=self.max_q, max_e=self.max_e,
+                          capacity=self.capacity,
+                          min_graph_nodes=self.device_min_nodes)
+
+
+@dataclass
+class EngineStats:
+    """Per-query execution record.
+
+    ``sim_passes`` is the measured pass count on the host backend, the
+    fixed pass budget on the truncated device path, and 0 (not tracked) on
+    the exact-sim device path.
+    """
+
+    backend: str = HOST
+    count: int = 0
+    parse_s: float = 0.0
+    plan_s: float = 0.0
+    exec_s: float = 0.0
+    total_s: float = 0.0
+    plan_cache_hit: bool = False
+    label_cache_hit: bool = False
+    overflow_fallback: bool = False
+    sim_passes: int = 0
+    rig_nodes: int = 0
+    rig_edges: int = 0
+    truncated: bool = False
+
+
+@dataclass
+class EngineResult:
+    count: int
+    tuples: Optional[np.ndarray]
+    query: PatternQuery            # the executed (transitively-reduced) query
+    plan: Plan
+    stats: EngineStats
+    key: str
+
+
+@dataclass
+class _PlanEntry:
+    plan: Plan
+    rig: RigStats = field(default_factory=RigStats)
+
+
+_RESIDENT_EPOCH = itertools.count()
+
+
+class _Resident:
+    """A registered graph: context + lazily-created matchers.
+
+    ``epoch`` is a process-unique token used in plan-cache keys instead of
+    ``id(graph)`` — a new graph allocated at a recycled address must not
+    inherit an evicted graph's plans or RIG statistics.
+    """
+
+    def __init__(self, graph: DataGraph, options: EngineOptions,
+                 label_names=None):
+        self.ctx = GraphContext(graph)
+        self.epoch = next(_RESIDENT_EPOCH)
+        self.options = options
+        self.vocab = Vocab.for_graph(graph, names=label_names)
+        self.planner = Planner(self.ctx.stats, caps=options.caps(),
+                               force_backend=options.force_backend)
+        self._gm: Optional[GM] = None
+        self._jgm = None
+        self._jgm_error: Optional[str] = None
+
+    def gm(self) -> GM:
+        if self._gm is None:
+            self.ctx.ensure_labels()
+            self._gm = GM(self.ctx.graph)
+            self._gm.oracle = self.ctx.oracle     # share the label cache
+        return self._gm
+
+    def jgm(self):
+        """Device matcher, or ``None`` if the device path is unavailable
+        (then the caller re-routes to the host; the error is kept on
+        ``_jgm_error`` and surfaced through ``Engine.cache_info``)."""
+        if self._jgm is None and self._jgm_error is None:
+            try:
+                from ..jaxgm import JaxGM
+                o = self.options
+                self._jgm = JaxGM(self.ctx.graph, max_q=o.max_q,
+                                  max_e=o.max_e, capacity=o.capacity,
+                                  exact_sim=o.exact_sim, impl=o.device_impl,
+                                  use_transitive_reduction=False)
+            except Exception as e:
+                self._jgm_error = f"{type(e).__name__}: {e}"
+                warnings.warn(
+                    f"device matcher unavailable, queries re-route to the "
+                    f"host backend: {self._jgm_error}", RuntimeWarning,
+                    stacklevel=2)
+        return self._jgm
+
+
+class Engine:
+    """Query engine bound to one (or a few) resident data graphs."""
+
+    def __init__(self, graph: Optional[DataGraph] = None, *,
+                 options: Optional[EngineOptions] = None,
+                 label_names=None):
+        self.options = options or EngineOptions()
+        self._residents: "OrderedDict[int, _Resident]" = OrderedDict()
+        self._plan_cache = LRUCache(self.options.plan_cache_size)
+        # memo: reduced-query structure -> canonical key, so the exact
+        # (up to n! permutations) canonicalization runs once per distinct
+        # query structure, not on every plan-cache hit
+        self._canon_memo = LRUCache(4 * self.options.plan_cache_size)
+        self.default_graph = graph
+        self.counters: Dict[str, int] = {
+            "queries": 0, "host_exec": 0, "device_exec": 0,
+            "overflow_fallbacks": 0, "label_builds": 0,
+        }
+        if graph is not None:
+            self.register(graph, label_names=label_names)
+
+    # ------------------------------------------------------------ residency
+    def register(self, graph: DataGraph, label_names=None) -> GraphContext:
+        """Make ``graph`` resident (idempotent).  Returns its context."""
+        key = id(graph)
+        if key not in self._residents:
+            self._residents[key] = _Resident(graph, self.options,
+                                             label_names=label_names)
+            while len(self._residents) > self.options.max_resident_graphs:
+                _, dead = self._residents.popitem(last=False)
+                # epochs are never reused, so the evicted graph's plan
+                # entries are unreachable — free their cache slots
+                self._plan_cache.drop_where(lambda k: k[0] == dead.epoch)
+        elif label_names is not None:
+            self._residents[key].vocab = Vocab.for_graph(graph,
+                                                         names=label_names)
+        self._residents.move_to_end(key)
+        if self.default_graph is None:
+            self.default_graph = graph
+        return self._residents[key].ctx
+
+    def _resident(self, graph: Optional[DataGraph]) -> _Resident:
+        g = graph if graph is not None else self.default_graph
+        if g is None:
+            raise ValueError("no resident graph: pass graph= or construct "
+                             "Engine(graph)")
+        self.register(g)
+        return self._residents[id(g)]
+
+    def context(self, graph: Optional[DataGraph] = None) -> GraphContext:
+        return self._resident(graph).ctx
+
+    # ------------------------------------------------------------- language
+    @property
+    def vocab(self) -> Vocab:
+        """The default graph's label vocabulary (each resident graph keeps
+        its own; ``parse``/``format`` accept ``graph=`` to select it)."""
+        if self.default_graph is not None:
+            return self._resident(None).vocab
+        return Vocab()
+
+    def parse(self, text: str, name: str = "",
+              graph: Optional[DataGraph] = None) -> PatternQuery:
+        vocab = (self._resident(graph).vocab
+                 if (graph is not None or self.default_graph is not None)
+                 else Vocab())
+        return parse(text, vocab=vocab, name=name)
+
+    def format(self, q: PatternQuery,
+               graph: Optional[DataGraph] = None) -> str:
+        vocab = (self._resident(graph).vocab
+                 if (graph is not None or self.default_graph is not None)
+                 else Vocab())
+        return fmt(q, vocab=vocab)
+
+    # ------------------------------------------------------------- planning
+    def _prepare(self, query: QueryLike, res: _Resident,
+                 stats: EngineStats):
+        """parse (if text) + TR + canonical key + plan-cache lookup."""
+        t0 = time.perf_counter()
+        q = (parse(query, vocab=res.vocab) if isinstance(query, str)
+             else query)
+        stats.parse_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        qr = q.transitive_reduction()
+        raw = (tuple(qr.labels),
+               tuple((e.src, e.dst, e.kind) for e in qr.edges))
+        ckey = self._canon_memo.get(raw)
+        if ckey is None:
+            ckey = canonical_key(qr, reduce=False)
+            self._canon_memo.put(raw, ckey)
+        key = (res.epoch, ckey)
+        entry: Optional[_PlanEntry] = self._plan_cache.get(key)
+        if entry is None:
+            entry = _PlanEntry(plan=res.planner.plan(qr))
+            self._plan_cache.put(key, entry)
+        else:
+            stats.plan_cache_hit = True
+            entry.plan = res.planner.refine(entry.plan, qr, entry.rig)
+        stats.plan_s = time.perf_counter() - t0
+        return qr, key[1], entry
+
+    def explain(self, query: QueryLike,
+                graph: Optional[DataGraph] = None) -> str:
+        """The plan the engine would run, as text (does not execute)."""
+        res = self._resident(graph)
+        stats = EngineStats()
+        qr, key, entry = self._prepare(query, res, stats)
+        cached = "cached" if stats.plan_cache_hit else "fresh"
+        return f"{key} -> {entry.plan.explain()} ({cached})"
+
+    # ------------------------------------------------------------ execution
+    def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
+                  stats: EngineStats, materialize: bool) -> MatchResult:
+        opts = entry.plan.gm_options(limit=self.options.limit,
+                                     materialize=materialize)
+        m = res.gm().match(qr, options=opts)
+        stats.backend = HOST
+        stats.sim_passes = m.sim_passes
+        stats.rig_nodes = m.rig_nodes
+        stats.rig_edges = m.rig_edges
+        stats.truncated = m.truncated
+        entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
+                          sim_passes=m.sim_passes, matching_s=m.matching_s,
+                          enumerate_s=m.enumerate_s, count=m.count)
+        self.counters["host_exec"] += 1
+        return m
+
+    def _post_device(self, res: _Resident, qr: PatternQuery,
+                     entry: _PlanEntry, stats: EngineStats, dev,
+                     materialize: bool):
+        """Common handling of one device result: stats, RIG-stats
+        observation, and exact host fallback on capacity overflow.
+        Returns ``(count, tuples)``."""
+        stats.backend = DEVICE
+        # exact_sim runs the device fixpoint loop, whose pass count is not
+        # surfaced; 0 = "not tracked" (the truncated mode reports its budget)
+        jgm = res.jgm()
+        stats.sim_passes = 0 if jgm.exact_sim else jgm.n_passes
+        stats.rig_nodes = int(np.sum(dev.fb_sizes))
+        self.counters["device_exec"] += 1
+        if dev.overflowed:
+            m = self._run_host(res, qr, entry, stats, materialize)
+            stats.backend = DEVICE          # device ran; host completed
+            stats.overflow_fallback = True
+            self.counters["overflow_fallbacks"] += 1
+            return m.count, m.tuples
+        entry.rig.observe(rig_nodes=stats.rig_nodes, rig_edges=0,
+                          sim_passes=stats.sim_passes,
+                          matching_s=0.0, enumerate_s=0.0, count=dev.count)
+        return dev.count, dev.tuples
+
+    def _finish(self, stats: EngineStats, count: int,
+                t_start: Optional[float] = None) -> None:
+        """``t_start=None`` (batch members): per-query total is the sum of
+        this query's own phases, not wall time since the batch began."""
+        stats.count = count
+        stats.total_s = (time.perf_counter() - t_start if t_start is not None
+                         else stats.parse_s + stats.plan_s + stats.exec_s)
+        self.counters["queries"] += 1
+
+    def execute(self, query: QueryLike, *,
+                graph: Optional[DataGraph] = None,
+                materialize: Optional[bool] = None) -> EngineResult:
+        """Plan and run one query; returns count/tuples + plan + stats."""
+        t_start = time.perf_counter()
+        res = self._resident(graph)
+        stats = EngineStats()
+        # parse/plan first: malformed text must not pay a cold label build
+        qr, key, entry = self._prepare(query, res, stats)
+        stats.label_cache_hit = res.ctx.ensure_labels()
+        if not stats.label_cache_hit:
+            self.counters["label_builds"] += 1
+        mat = self.options.materialize if materialize is None else materialize
+
+        t0 = time.perf_counter()
+        if entry.plan.backend == DEVICE and res.jgm() is not None:
+            dev = res.jgm().match(qr, materialize=mat)
+            count, tuples = self._post_device(res, qr, entry, stats, dev, mat)
+        else:
+            m = self._run_host(res, qr, entry, stats, mat)
+            count, tuples = m.count, m.tuples
+        stats.exec_s = time.perf_counter() - t0
+        self._finish(stats, count, t_start)
+        return EngineResult(count=count, tuples=tuples, query=qr,
+                            plan=entry.plan, stats=stats, key=key)
+
+    def execute_many(self, queries: Sequence[QueryLike], *,
+                     graph: Optional[DataGraph] = None
+                     ) -> List[EngineResult]:
+        """Batched execution: device-planned queries go through the vmapped
+        device matcher in one dispatch; the rest run on the host."""
+        res = self._resident(graph)
+        # parse/plan the whole batch first: a malformed query raises before
+        # any cold label build is paid
+        prepared = []
+        for query in queries:
+            stats = EngineStats()
+            qr, key, entry = self._prepare(query, res, stats)
+            prepared.append((qr, key, entry, stats))
+        label_hit = res.ctx.ensure_labels()
+        if not label_hit:
+            self.counters["label_builds"] += 1
+        for i, (_, _, _, stats) in enumerate(prepared):
+            # resident for every query after the first in this batch
+            stats.label_cache_hit = label_hit or i > 0
+
+        device_idx = [i for i, (_, _, e, _) in enumerate(prepared)
+                      if e.plan.backend == DEVICE]
+        results: List[Optional[EngineResult]] = [None] * len(prepared)
+
+        jgm = res.jgm() if len(device_idx) else None
+        if jgm is not None and len(device_idx) >= 2:
+            t0 = time.perf_counter()
+            batch = jgm.match_batch([prepared[i][0] for i in device_idx])
+            dt = time.perf_counter() - t0
+            for i, dev in zip(device_idx, batch):
+                qr, key, entry, stats = prepared[i]
+                t1 = time.perf_counter()
+                count, _ = self._post_device(res, qr, entry, stats, dev,
+                                             materialize=False)
+                # this query's share of the batched dispatch, plus any host
+                # overflow-fallback time it caused individually
+                stats.exec_s = (dt / len(device_idx)
+                                + time.perf_counter() - t1)
+                self._finish(stats, count)
+                results[i] = EngineResult(count=count, tuples=None, query=qr,
+                                          plan=entry.plan, stats=stats,
+                                          key=key)
+            device_idx = []
+
+        for i, (qr, key, entry, stats) in enumerate(prepared):
+            if results[i] is not None:
+                continue
+            t0 = time.perf_counter()
+            if i in device_idx and jgm is not None:
+                # singleton device query: non-batched dispatch
+                dev = jgm.match(qr, materialize=False)
+                count, _ = self._post_device(res, qr, entry, stats, dev,
+                                             materialize=False)
+            else:
+                m = self._run_host(res, qr, entry, stats, materialize=False)
+                count = m.count
+            stats.exec_s = time.perf_counter() - t0
+            self._finish(stats, count)
+            results[i] = EngineResult(count=count, tuples=None, query=qr,
+                                      plan=entry.plan, stats=stats, key=key)
+        return results    # type: ignore[return-value]
+
+    # ------------------------------------------------------------- insight
+    def cache_info(self) -> Dict[str, int]:
+        info = {
+            "plan_entries": len(self._plan_cache),
+            "plan_hits": self._plan_cache.hits,
+            "plan_misses": self._plan_cache.misses,
+            "plan_evictions": self._plan_cache.evictions,
+            "resident_graphs": len(self._residents),
+            "label_builds": self.counters["label_builds"],
+        }
+        errors = [r._jgm_error for r in self._residents.values()
+                  if r._jgm_error]
+        if errors:
+            info["device_errors"] = "; ".join(errors)
+        return info

@@ -1,0 +1,158 @@
+"""Query planner: canonical form -> backend / algorithm / check-method.
+
+The matcher core exposes several interchangeable execution choices that the
+paper ablates (Figs. 8-11); the planner picks them per query from
+:class:`~repro.engine.stats.GraphStats` instead of hard-coding one variant:
+
+* **backend** — host ``GM`` (``repro.core``) vs device ``JaxGM``
+  (``repro.jaxgm``).  The device pipeline pays a dispatch/compile overhead
+  and works on padded tensors, so it wins on large resident graphs and
+  batch traffic; small graphs and over-wide queries stay on the host.
+* **simulation algorithm** — ``bas`` for trivially small patterns (the
+  Dag+Δ bookkeeping costs more than it saves), ``dagmap`` otherwise
+  (Fig. 8(b): change-flag skipping is the best variant).
+* **check method** — ``bitbat`` (batched bitset ops) unless the graph is so
+  large and the match sets so sparse that per-candidate ``bititer`` touches
+  fewer words.
+* **ordering** — ``jo`` (the paper's default search ordering).
+
+Plans are cached by canonical query key; on repeat executions the observed
+``RigStats`` re-plan the backend (e.g. a query whose RIG collapsed to a few
+nodes is cheaper on the host even on a big graph).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
+
+from ..core.matcher import GMOptions
+from ..core.mjoin import DEFAULT_LIMIT
+from ..core.query import PatternQuery
+from .stats import GraphStats, RigStats
+
+__all__ = ["DeviceCaps", "Plan", "Planner"]
+
+HOST = "host"
+DEVICE = "device"
+
+
+@dataclass(frozen=True)
+class DeviceCaps:
+    """Static limits of the device matcher (query padding + frontier)."""
+
+    max_q: int = 8
+    max_e: int = 16
+    capacity: int = 4096
+    min_graph_nodes: int = 512    # below this, dispatch overhead dominates
+
+
+@dataclass
+class Plan:
+    backend: str                   # "host" | "device"
+    sim_algo: str                  # bas | dag | dagmap | none
+    check_method: str              # binsearch | bititer | bitbat
+    ordering: str = "jo"
+    sim_passes: Optional[int] = 4
+    est_cost: float = 0.0
+    est_card: float = 0.0
+    reasons: Tuple[str, ...] = ()
+
+    def gm_options(self, *, limit: Optional[int] = DEFAULT_LIMIT,
+                   materialize: bool = False,
+                   max_tuples: int = 1_000_000) -> GMOptions:
+        """Host-matcher options realizing this plan.  The engine hands the
+        matcher an already-reduced query, so TR is off here."""
+        return GMOptions(use_transitive_reduction=False,
+                         sim_algo=self.sim_algo, sim_passes=self.sim_passes,
+                         check_method=self.check_method,
+                         ordering=self.ordering, limit=limit,
+                         materialize=materialize, max_tuples=max_tuples)
+
+    def explain(self) -> str:
+        why = "; ".join(self.reasons) if self.reasons else "defaults"
+        return (f"backend={self.backend} sim={self.sim_algo} "
+                f"check={self.check_method} order={self.ordering} "
+                f"est_cost={self.est_cost:.3g} est_card={self.est_card:.3g} "
+                f"[{why}]")
+
+
+# The cost (in the unitless GraphStats scale) below which a repeat query's
+# observed RIG makes host enumeration a sure win over a device dispatch.
+TINY_RIG_NODES = 64
+# Sparse-match-set threshold for preferring per-candidate iteration over
+# whole-matrix batched bitset checks.
+SPARSE_GRAPH_NODES = 1 << 16
+SPARSE_MS_FRACTION = 1e-3
+
+
+class Planner:
+    def __init__(self, stats: GraphStats, caps: Optional[DeviceCaps] = None,
+                 force_backend: Optional[str] = None):
+        self.stats = stats
+        self.caps = caps or DeviceCaps()
+        self.force_backend = force_backend
+
+    # ------------------------------------------------------------- backend
+    def _pick_backend(self, q: PatternQuery,
+                      reasons: List[str]) -> str:
+        if self.force_backend is not None:
+            reasons.append(f"backend forced to {self.force_backend}")
+            return self.force_backend
+        if q.n > self.caps.max_q or q.m > self.caps.max_e:
+            reasons.append(
+                f"query ({q.n} nodes / {q.m} edges) exceeds device caps "
+                f"({self.caps.max_q}/{self.caps.max_e})")
+            return HOST
+        if self.stats.n < self.caps.min_graph_nodes:
+            reasons.append(
+                f"graph ({self.stats.n} nodes) below device threshold "
+                f"({self.caps.min_graph_nodes}): dispatch overhead dominates")
+            return HOST
+        reasons.append("query fits device caps and graph is large")
+        return DEVICE
+
+    # ------------------------------------------------------------ sim algo
+    def _pick_sim(self, q: PatternQuery, reasons: List[str]) -> str:
+        if q.m <= 2:
+            reasons.append("tiny pattern: FBSimBas (no Dag+Δ bookkeeping)")
+            return "bas"
+        reasons.append("dagmap simulation (change-flag convergence)")
+        return "dagmap"
+
+    # -------------------------------------------------------- check method
+    def _pick_check(self, q: PatternQuery, reasons: List[str]) -> str:
+        ms = [self.stats.match_set_size(l) for l in q.labels]
+        avg_ms = sum(ms) / max(len(ms), 1)
+        if (self.stats.n > SPARSE_GRAPH_NODES
+                and avg_ms < SPARSE_MS_FRACTION * self.stats.n):
+            reasons.append("huge graph + sparse match sets: bititer")
+            return "bititer"
+        reasons.append("bitbat batch checking")
+        return "bitbat"
+
+    # ----------------------------------------------------------------- API
+    def plan(self, q: PatternQuery) -> Plan:
+        """Plan an (already transitively-reduced) query."""
+        reasons: List[str] = []
+        backend = self._pick_backend(q, reasons)
+        sim = self._pick_sim(q, reasons)
+        check = self._pick_check(q, reasons)
+        return Plan(backend=backend, sim_algo=sim, check_method=check,
+                    est_cost=self.stats.estimate_cost(q),
+                    est_card=self.stats.estimate_cardinality(q),
+                    reasons=tuple(reasons))
+
+    def refine(self, plan: Plan, q: PatternQuery,
+               rig: RigStats) -> Plan:
+        """Re-plan from observed RIG statistics (repeat executions)."""
+        if self.force_backend is not None:
+            return plan
+        if (plan.backend == DEVICE and rig.observations
+                and rig.rig_nodes <= TINY_RIG_NODES):
+            return replace(
+                plan, backend=HOST,
+                reasons=plan.reasons + (
+                    f"observed RIG has {rig.rig_nodes} nodes "
+                    f"(<= {TINY_RIG_NODES}): host enumeration wins",))
+        return plan

@@ -1,0 +1,101 @@
+"""Graph- and query-level statistics feeding the planner's cost model.
+
+``GraphStats`` is collected once per resident graph (O(n + m), cached in
+the :class:`~repro.engine.cache.GraphContext`); ``RigStats`` is observed
+per executed query and stored in the plan cache so repeat queries can be
+re-planned against measured RIG sizes instead of estimates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+from ..core.graph import DataGraph
+from ..core.query import CHILD, PatternQuery
+
+__all__ = ["GraphStats", "RigStats"]
+
+
+@dataclass
+class GraphStats:
+    n: int
+    n_edges: int
+    num_labels: int
+    avg_degree: float
+    max_out_degree: int
+    label_counts: Dict[int, int]
+
+    @classmethod
+    def collect(cls, graph: DataGraph) -> "GraphStats":
+        odeg = graph.out_degree()
+        return cls(
+            n=graph.n,
+            n_edges=graph.n_edges,
+            num_labels=graph.num_labels,
+            avg_degree=graph.avg_degree,
+            max_out_degree=int(odeg.max()) if graph.n else 0,
+            label_counts={l: len(ix) for l, ix in graph.inverted.items()},
+        )
+
+    # ------------------------------------------------------------ estimates
+    def match_set_size(self, label: int) -> int:
+        """|ms(q)| = |I_label| exactly (the inverted lists are exact)."""
+        return self.label_counts.get(int(label), 0)
+
+    def reach_set_size(self) -> float:
+        """Crude estimate of the average ≺-set size: a branching process
+        ``d + d² + d³`` capped at n.  Good enough to rank child vs
+        descendant edge costs; refined by observed RigStats on repeats."""
+        d = self.avg_degree
+        return float(min(self.n, d + d * d + d * d * d))
+
+    def edge_fanout(self, kind: int) -> float:
+        return self.avg_degree if kind == CHILD else self.reach_set_size()
+
+    def estimate_cost(self, q: PatternQuery) -> float:
+        """Unitless cost of matching ``q``: simulation work (sum of match
+        sets, once per edge per pass) plus an expansion/enumeration term
+        (per-edge occurrence estimates)."""
+        ms = [self.match_set_size(l) for l in q.labels]
+        sim = float(sum(ms)) * max(q.m, 1)
+        expand = 0.0
+        for e in q.edges:
+            sel = ms[e.dst] / max(self.n, 1)          # label selectivity
+            expand += ms[e.src] * self.edge_fanout(e.kind) * sel
+        return sim + expand
+
+    def estimate_cardinality(self, q: PatternQuery) -> float:
+        """Occurrence-count estimate under edge independence."""
+        card = 1.0
+        for l in q.labels:
+            card *= max(self.match_set_size(l), 0)
+        for e in q.edges:
+            p = self.edge_fanout(e.kind) / max(self.n, 1)
+            card *= min(p, 1.0)
+        return card
+
+
+@dataclass
+class RigStats:
+    """Observed runtime-index-graph statistics for one executed query."""
+
+    rig_nodes: int = 0
+    rig_edges: int = 0
+    sim_passes: int = 0
+    matching_s: float = 0.0
+    enumerate_s: float = 0.0
+    count: int = 0
+    observations: int = 0
+
+    def observe(self, *, rig_nodes: int, rig_edges: int, sim_passes: int,
+                matching_s: float, enumerate_s: float, count: int) -> None:
+        self.rig_nodes = rig_nodes
+        self.rig_edges = rig_edges
+        self.sim_passes = sim_passes
+        self.matching_s = matching_s
+        self.enumerate_s = enumerate_s
+        self.count = count
+        self.observations += 1

@@ -1,0 +1,25 @@
+"""Version compatibility shims for the jax API surface we use.
+
+``jax.shard_map`` (with its ``check_vma`` flag) graduated out of
+``jax.experimental.shard_map`` (where the flag was called ``check_rep``)
+in newer jax releases; this module exposes one ``shard_map`` that works on
+both, so the distributed pipeline imports from here instead of pinning a
+jax version.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

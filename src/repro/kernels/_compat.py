@@ -1,0 +1,14 @@
+"""Pallas-TPU API compatibility.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+jax releases; the kernels import the name from here so they run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 WORD = 32
 
 
@@ -81,7 +83,7 @@ def bitmm_pallas(a_words: jax.Array, x: jax.Array, *, threshold: bool = True,
         out_specs=pl.BlockSpec((bm, b), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, b), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, b), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a_words, x)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _intersect_kernel(rows_ref, and_ref, cnt_ref, acc_ref, *, k_rows: int):
     w = pl.program_id(1)
@@ -63,7 +65,7 @@ def intersect_pallas(rows: jax.Array, *, bf: int = 128, bw: int = 512,
             jax.ShapeDtypeStruct((f, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((bf, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rows)

@@ -1,8 +1,10 @@
 """Pattern-query serving driver — the paper-kind end-to-end application.
 
-A batched query server over one resident data graph: requests arrive, are
-micro-batched, evaluated with the device matcher (vmapped GM pipeline), and
-answered with counts / sample occurrences.  Production behaviours:
+A batched query server over one resident data graph, driven through the
+``repro.engine`` subsystem: requests (textual queries or ``PatternQuery``
+objects) arrive, are micro-batched, planned per query (device matcher for
+fitting queries, host GM for over-wide ones) and answered with counts.
+Production behaviours:
 
 * **request journal** — every request is journaled before dispatch; a worker
   failure (or deadline miss) re-dispatches from the journal.  The RIG is
@@ -10,8 +12,12 @@ answered with counts / sample occurrences.  Production behaviours:
   state repair;
 * **straggler mitigation** — per-batch deadline; batches that blow the
   deadline are split and retried (shrinking the frontier capacity);
-* **admission control** — queries wider than max_q/max_e are rejected
-  upfront (the host GM path can serve them out-of-band).
+* **admission control** — malformed query text is rejected at submit with
+  the parser's error message; over-wide queries are no longer rejected but
+  planned onto the host GM path;
+* **cross-query caching** — the engine's per-graph label cache means the
+  reachability index is built once at server start, and its plan cache
+  means repeat query shapes skip planning.
 
 Usage:
   python -m repro.launch.serve --n-queries 64 --graph-nodes 2000
@@ -22,46 +28,57 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
-import numpy as np
-
-from ..core import GM, GMOptions
+from ..core.query import PatternQuery
 from ..data.graphs import random_labeled_graph
-from ..data.queries import random_query_from_graph, template_queries
-from ..jaxgm import JaxGM
+from ..data.queries import random_query_from_graph
+from ..engine import Engine, EngineOptions, QueryParseError
 
 
 @dataclass
 class Request:
     rid: int
-    query: object
+    query: PatternQuery
     submitted: float = field(default_factory=time.time)
     attempts: int = 0
     done: bool = False
     count: Optional[int] = None
     overflowed: bool = False
+    backend: str = ""
 
 
 class QueryServer:
     def __init__(self, graph, *, max_q=8, max_e=16, batch_size=16,
                  capacity=4096, deadline_s=30.0, max_attempts=3,
-                 impl="reference"):
+                 impl="reference", engine: Optional[Engine] = None):
         self.graph = graph
-        self.jgm = JaxGM(graph, max_q=max_q, max_e=max_e, capacity=capacity,
-                         exact_sim=True, impl=impl)
-        self.host_gm = GM(graph, GMOptions(materialize=False))
+        # device_min_nodes=0: the server is the device-serving driver, so
+        # any query that fits the device caps goes through the vmapped
+        # matcher regardless of graph size; wide queries plan onto the host.
+        self.engine = engine or Engine(graph, options=EngineOptions(
+            max_q=max_q, max_e=max_e, capacity=capacity, device_min_nodes=0,
+            device_impl=impl, exact_sim=True, materialize=False))
         self.batch_size = batch_size
         self.deadline_s = deadline_s
         self.max_attempts = max_attempts
         self.journal: Dict[int, Request] = {}
+        self.rejected: Dict[int, str] = {}      # rid -> parse error message
         self.stats = {"served": 0, "redispatched": 0, "rejected": 0,
                       "host_fallback": 0}
 
-    def submit(self, rid: int, query) -> bool:
-        if query.n > self.jgm.max_q or query.m > self.jgm.max_e:
-            self.stats["rejected"] += 1
-            return False
+    def submit(self, rid: int, query: Union[str, PatternQuery]) -> bool:
+        """Journal a request.  Textual queries are parsed here (admission
+        control): a malformed query is rejected and the caret-annotated
+        parse error recorded in ``self.rejected[rid]``; well-formed queries
+        are always admitted."""
+        if isinstance(query, str):
+            try:
+                query = self.engine.parse(query)
+            except QueryParseError as e:
+                self.rejected[rid] = str(e)
+                self.stats["rejected"] += 1
+                return False
         self.journal[rid] = Request(rid=rid, query=query)
         return True
 
@@ -81,7 +98,7 @@ class QueryServer:
             self.stats["redispatched"] += len(batch)
             return 0
         t0 = time.time()
-        results = self.jgm.match_batch([r.query for r in batch])
+        results = self.engine.execute_many([r.query for r in batch])
         dt = time.time() - t0
         if dt > self.deadline_s and len(batch) > 1:
             # straggler batch: split next time.  A deadline miss is a
@@ -93,13 +110,11 @@ class QueryServer:
                 r.attempts -= 1
             return 0
         for r, res in zip(batch, results):
-            if res.overflowed:
-                # exact answer via the host enumerator (capacity overflow)
-                res_count = self.host_gm.match(r.query).count
-                r.count, r.overflowed = res_count, True
+            r.count = res.count
+            r.overflowed = res.stats.overflow_fallback
+            r.backend = res.stats.backend
+            if res.stats.overflow_fallback:
                 self.stats["host_fallback"] += 1
-            else:
-                r.count = res.count
             r.done = True
             self.stats["served"] += 1
         return len(batch)
@@ -133,7 +148,8 @@ def main() -> None:
     dt = time.time() - t0
     counts = [server.journal[i].count for i in sorted(server.journal)]
     print(f"[serve] {n} queries in {dt:.2f}s "
-          f"({n / max(dt, 1e-9):.1f} qps) stats={server.stats}")
+          f"({n / max(dt, 1e-9):.1f} qps) stats={server.stats} "
+          f"engine={server.engine.cache_info()}")
     print(f"[serve] counts: {counts[:10]}{'...' if len(counts) > 10 else ''}")
 
 

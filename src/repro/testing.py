@@ -1,0 +1,48 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+The property-based tests use hypothesis when it is installed (the ``test``
+extra); on a bare interpreter the same modules must still import and run
+their example-based tests.  Importing ``given``/``settings``/``st`` from
+here instead of ``hypothesis`` makes the property tests skip cleanly when
+the dependency is missing::
+
+    from repro.testing import HAVE_HYPOTHESIS, given, settings, st
+
+``st`` is a stub whose strategy constructors accept anything and return
+placeholders — the decorated test is marked ``skip`` before any strategy
+is ever drawn from.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # bare interpreter
+    HAVE_HYPOTHESIS = False
+    import pytest
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e '.[test]')"
+            )(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction; never actually drawn from."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

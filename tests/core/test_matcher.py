@@ -4,8 +4,7 @@ property of the whole paper pipeline)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import GM, GMOptions, match
 from repro.core.baselines import jm_match, tm_match

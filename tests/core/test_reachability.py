@@ -1,8 +1,7 @@
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import bitset
 from repro.core.graph import paper_example_graph

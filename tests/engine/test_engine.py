@@ -1,0 +1,210 @@
+"""Engine facade: GM-equivalence, caching behaviour, batched execution."""
+
+import numpy as np
+import pytest
+
+from repro.core import GM, GMOptions
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+from repro.engine import Engine, EngineOptions, QueryParseError, fmt, parse
+from repro.testing import given, settings, st
+
+
+def _host_engine(g, **kw):
+    # device_min_nodes high: keep these tests on the host path (fast, no jit)
+    return Engine(g, options=EngineOptions(device_min_nodes=10**9,
+                                           materialize=False, **kw))
+
+
+# ----------------------------------------------------- acceptance: GM parity
+def test_execute_text_equals_hand_built_query():
+    """Acceptance: Engine.execute('(a:L0)-/->(b:L1)-//->(c:L2)') returns the
+    same match count as the equivalent PatternQuery run through GM."""
+    g = random_labeled_graph(400, avg_degree=3.0, n_labels=4, seed=7)
+    eng = _host_engine(g)
+    text = "(a:L0)-/->(b:L1)-//->(c:L2)"
+    res = eng.execute(text)
+    want = GM(g, GMOptions(materialize=False)).match(parse(text)).count
+    assert res.count == want > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("qtype", ["C", "H", "D"])
+def test_engine_matches_gm_on_random_graphs(seed, qtype):
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=5, seed=seed)
+    gm = GM(g, GMOptions(materialize=False))
+    eng = _host_engine(g)
+    for i in range(3):
+        q = random_query_from_graph(g, 3 + i, qtype=qtype, seed=10 * seed + i)
+        res = eng.execute(fmt(q))              # through the text pipeline
+        assert res.count == gm.match(q).count
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_engine_matches_gm_property(seed):
+    g = random_labeled_graph(150, avg_degree=3.0, n_labels=4, seed=1)
+    q = random_query_from_graph(g, 3 + seed % 3,
+                                qtype=["C", "H", "D"][seed % 3], seed=seed)
+    eng = _host_engine(g)
+    assert eng.execute(q).count == \
+        GM(g, GMOptions(materialize=False)).match(q).count
+
+
+def test_execute_materializes_tuples():
+    g = random_labeled_graph(200, avg_degree=3.0, n_labels=4, seed=3)
+    eng = Engine(g, options=EngineOptions(device_min_nodes=10**9))
+    res = eng.execute("(a:L0)-//->(b:L1)")
+    assert res.tuples is not None and res.tuples.shape == (res.count, 2)
+
+
+# ------------------------------------------------------------- label cache
+def test_label_cache_second_query_skips_construction():
+    g = random_labeled_graph(300, avg_degree=3.0, n_labels=5, seed=0)
+    eng = _host_engine(g)
+    r1 = eng.execute("(a:L0)-//->(b:L1)")
+    assert not r1.stats.label_cache_hit        # cold: labels built here
+    ctx = eng.context()
+    assert ctx.label_builds == 1
+    oracle_before = ctx.oracle
+    intervals_before = ctx.intervals
+    r2 = eng.execute("(a:L2)-/->(b:L3)-//->(c:L4)")   # different query!
+    assert r2.stats.label_cache_hit
+    assert ctx.label_builds == 1               # no re-construction
+    assert ctx.oracle is oracle_before         # same reachability labeling
+    assert ctx.intervals is intervals_before   # same interval labels
+    assert eng.counters["label_builds"] == 1
+
+
+def test_label_cache_per_graph():
+    g1 = random_labeled_graph(200, n_labels=4, seed=0)
+    g2 = random_labeled_graph(200, n_labels=4, seed=1)
+    eng = _host_engine(g1)
+    eng.execute("(a:L0)-//->(b:L1)")
+    r = eng.execute("(a:L0)-//->(b:L1)", graph=g2)
+    assert not r.stats.label_cache_hit         # g2 is cold
+    assert eng.counters["label_builds"] == 2
+    assert eng.execute("(a:L1)-/->(b:L2)", graph=g2).stats.label_cache_hit
+
+
+# -------------------------------------------------------------- plan cache
+def test_plan_cache_hits_on_isomorphic_requery():
+    g = random_labeled_graph(300, avg_degree=3.0, n_labels=5, seed=0)
+    eng = _host_engine(g)
+    r1 = eng.execute("(a:L0)-/->(b:L1)-//->(c:L2)")
+    assert not r1.stats.plan_cache_hit
+    # same pattern, different node names and segment order
+    r2 = eng.execute("(y:L1)-//->(z:L2), (x:L0)-/->(y)")
+    assert r2.stats.plan_cache_hit
+    assert r2.count == r1.count
+    info = eng.cache_info()
+    assert info["plan_entries"] == 1 and info["plan_hits"] == 1
+
+
+def test_plan_cache_lru_eviction():
+    g = random_labeled_graph(100, n_labels=6, seed=0)
+    eng = Engine(g, options=EngineOptions(device_min_nodes=10**9,
+                                          materialize=False,
+                                          plan_cache_size=2))
+    for la, lb in [(0, 1), (1, 2), (2, 3)]:
+        eng.execute(f"(a:L{la})-/->(b:L{lb})")
+    info = eng.cache_info()
+    assert info["plan_entries"] == 2 and info["plan_evictions"] == 1
+
+
+# ------------------------------------------------------------ execute_many
+def test_execute_many_matches_singles():
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=5, seed=2)
+    eng = _host_engine(g)
+    qs = [random_query_from_graph(g, 3 + i % 2, qtype=["C", "H", "D"][i % 3],
+                                  seed=i) for i in range(6)]
+    qs.append("(a:L0)-//->(b:L1)")             # mixed text + objects
+    batch = eng.execute_many(qs)
+    gm = GM(g, GMOptions(materialize=False))
+    for q, r in zip(qs, batch):
+        qq = parse(q) if isinstance(q, str) else q
+        assert r.count == gm.match(qq).count
+    assert all(r.stats.label_cache_hit for r in batch[1:])
+
+
+def test_engine_stats_recorded():
+    g = random_labeled_graph(200, n_labels=4, seed=0)
+    eng = _host_engine(g)
+    r = eng.execute("(a:L0)-//->(b:L1)")
+    s = r.stats
+    assert s.backend == "host"
+    assert s.total_s > 0 and s.exec_s > 0
+    assert s.rig_nodes >= 0 and s.sim_passes >= 1
+    assert eng.counters["queries"] == 1
+    assert eng.counters["host_exec"] == 1
+
+
+# ----------------------------------------------------------------- errors
+def test_engine_rejects_label_outside_graph_space():
+    g = random_labeled_graph(100, n_labels=3, seed=0)
+    eng = _host_engine(g)
+    with pytest.raises(QueryParseError, match="unknown label"):
+        eng.execute("(a:L5)-/->(b:L0)")
+
+
+def test_engine_named_labels():
+    g = random_labeled_graph(200, n_labels=3, seed=0)
+    eng = Engine(g, label_names=["Red", "Green", "Blue"],
+                 options=EngineOptions(device_min_nodes=10**9,
+                                       materialize=False))
+    r = eng.execute("(a:Red)-//->(b:Blue)")
+    want = eng.execute("(a:L0)-//->(b:L2)")    # generic spelling still works
+    assert r.count == want.count
+
+
+def test_execute_many_per_item_timing():
+    g = random_labeled_graph(150, n_labels=4, seed=0)
+    eng = _host_engine(g)
+    batch = eng.execute_many(["(a:L0)-//->(b:L1)"] * 4)
+    for r in batch:
+        s = r.stats
+        assert s.total_s == pytest.approx(s.parse_s + s.plan_s + s.exec_s)
+
+
+def test_server_records_rejection_reason():
+    from repro.launch.serve import QueryServer
+    g = random_labeled_graph(100, n_labels=4, seed=0)
+    srv = QueryServer(g)
+    assert not srv.submit(7, "(a:L0)-/=>(b:L1)")
+    assert "unexpected character" in srv.rejected[7]
+    assert srv.stats["rejected"] == 1
+
+
+def test_vocab_is_per_resident_graph():
+    g1 = random_labeled_graph(100, n_labels=3, seed=0)
+    g2 = random_labeled_graph(100, n_labels=8, seed=1)
+    eng = _host_engine(g1)
+    # L5 is invalid for g1 but valid for g2 — parse must use g2's vocab
+    r = eng.execute("(a:L5)-/->(b:L0)", graph=g2)
+    assert r.count >= 0
+    with pytest.raises(QueryParseError, match="unknown label"):
+        eng.execute("(a:L5)-/->(b:L0)")        # still rejected on g1
+
+
+def test_malformed_query_does_not_pay_label_build():
+    g = random_labeled_graph(200, n_labels=3, seed=0)
+    eng = _host_engine(g)
+    with pytest.raises(QueryParseError):
+        eng.execute("(a:L9)-/->(b:L0)")        # cold engine, bad label
+    assert eng.context().label_builds == 0     # no wasted construction
+    with pytest.raises(QueryParseError):
+        eng.execute_many(["(a:L0)-/->(b:L1)", "(((", ])
+    assert eng.context().label_builds == 0
+
+
+def test_resident_eviction_purges_plan_cache():
+    eng = Engine(options=EngineOptions(device_min_nodes=10**9,
+                                       materialize=False,
+                                       max_resident_graphs=1))
+    g1 = random_labeled_graph(100, n_labels=3, seed=0)
+    g2 = random_labeled_graph(100, n_labels=3, seed=1)
+    eng.execute("(a:L0)-/->(b:L1)", graph=g1)
+    assert eng.cache_info()["plan_entries"] == 1
+    eng.execute("(a:L0)-/->(b:L1)", graph=g2)  # evicts g1's residency
+    assert eng.cache_info()["resident_graphs"] == 1
+    assert eng.cache_info()["plan_entries"] == 1   # g1's entry purged

@@ -1,0 +1,145 @@
+"""Query-language round-trip and parse-error tests."""
+
+import pytest
+
+from repro.core import CHILD, DESC, PatternQuery, QueryEdge, query
+from repro.core.query import paper_example_query
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph, template_queries
+from repro.engine import QueryParseError, Vocab, fmt, parse
+from repro.testing import given, settings, st
+
+
+# ------------------------------------------------------------- round trips
+def _strip_name(q: PatternQuery) -> PatternQuery:
+    return PatternQuery(labels=list(q.labels), edges=list(q.edges))
+
+
+def test_round_trip_simple_chain():
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    assert q.labels == [0, 1, 2]
+    assert q.edges == [QueryEdge(0, 1, CHILD), QueryEdge(1, 2, DESC)]
+    assert fmt(q) == "(a:L0)-/->(b:L1)-//->(c:L2)"
+    assert parse(fmt(q)) == q
+
+
+def test_round_trip_paper_example():
+    q = _strip_name(paper_example_query())
+    assert parse(fmt(q)) == q
+
+
+def test_round_trip_needs_declarations():
+    # the only edge points 1 -> 0: chain emission alone would re-index
+    q = query(labels=[3, 5], edges=[(1, 0, CHILD)])
+    q = _strip_name(q)
+    text = fmt(q)
+    assert parse(text) == q
+    assert text.startswith("(a:L3)")          # node 0 declared first
+
+
+def test_round_trip_single_node():
+    q = PatternQuery(labels=[2], edges=[])
+    assert fmt(q) == "(a:L2)"
+    assert parse(fmt(q)) == q
+
+
+def test_round_trip_templates_and_random():
+    g = random_labeled_graph(200, avg_degree=3.0, n_labels=6, seed=0)
+    qs = template_queries(g, qtype="H", seed=1)
+    qs += [random_query_from_graph(g, 3 + i % 3, qtype=["C", "H", "D"][i % 3],
+                                   seed=i) for i in range(9)]
+    for q in qs:
+        q = _strip_name(q)
+        assert parse(fmt(q)) == q, fmt(q)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["C", "H", "D"]),
+       st.integers(3, 6))
+@settings(max_examples=25, deadline=None)
+def test_round_trip_property(seed, qtype, n_nodes):
+    g = random_labeled_graph(150, avg_degree=3.0, n_labels=5, seed=0)
+    q = _strip_name(random_query_from_graph(g, n_nodes, qtype=qtype,
+                                            seed=seed))
+    assert parse(fmt(q)) == q
+
+
+def test_reverse_edge_syntax():
+    q = parse("(a:L0)<-/-(b:L1)<-//-(c:L2)")
+    assert q.edges == [QueryEdge(1, 0, CHILD), QueryEdge(2, 1, DESC)]
+
+
+def test_re_mention_merges_and_child_subsumes_desc():
+    q = parse("(a:L0)-/->(b:L1), (a)-//->(b)")
+    # PatternQuery dedups: child subsumes descendant on the same pair
+    assert q.edges == [QueryEdge(0, 1, CHILD)]
+
+
+def test_named_vocab_round_trip():
+    v = Vocab(names=["Person", "City", "Country"])
+    q = parse("(a:Person)-/->(b:City)-//->(c:Country)", vocab=v)
+    assert q.labels == [0, 1, 2]
+    assert fmt(q, vocab=v) == "(a:Person)-/->(b:City)-//->(c:Country)"
+    assert parse(fmt(q, vocab=v), vocab=v) == q
+
+
+# ------------------------------------------------------------ parse errors
+def _err(text, vocab=None):
+    with pytest.raises(QueryParseError) as ei:
+        parse(text, vocab=vocab)
+    return str(ei.value)
+
+
+def test_error_unknown_label():
+    msg = _err("(a:Person)-/->(b:City)", vocab=Vocab(names=["City"]))
+    assert "unknown label 'Person'" in msg
+    assert "City" in msg                       # lists known labels
+    assert "^" in msg                          # caret display
+
+
+def test_error_label_out_of_graph_space():
+    g = random_labeled_graph(50, n_labels=4, seed=0)
+    msg = _err("(a:L7)-/->(b:L0)", vocab=Vocab.for_graph(g))
+    assert "unknown label 'L7'" in msg
+
+
+def test_error_missing_label_on_first_mention():
+    msg = _err("(a)-/->(b:L1)")
+    assert "needs a label on first mention" in msg
+
+
+def test_error_relabeled_node():
+    msg = _err("(a:L0)-/->(b:L1), (a:L2)-//->(b)")
+    assert "relabeled" in msg
+
+
+def test_error_bad_edge_token():
+    msg = _err("(a:L0)-/=>(b:L1)")
+    assert "unexpected character" in msg
+
+
+def test_error_self_loop():
+    msg = _err("(a:L0)-/->(a)")
+    assert "self-loop" in msg
+
+
+def test_error_dangling_edge():
+    msg = _err("(a:L0)-/->")
+    assert "expected '('" in msg
+
+
+def test_error_empty():
+    with pytest.raises(QueryParseError):
+        parse("   ")
+
+
+def test_error_missing_comma():
+    msg = _err("(a:L0)-/->(b:L1) (c:L2)-/->(b)")
+    assert "','" in msg
+
+
+def test_vocab_rejects_invalid_names():
+    with pytest.raises(ValueError, match="not a valid identifier"):
+        Vocab(names=["my label"])
+    with pytest.raises(ValueError, match="shadows the generic"):
+        Vocab(names={"L0": 1})
+    Vocab(names={"L1": 1})                     # consistent generic name: ok

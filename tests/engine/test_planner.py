@@ -1,0 +1,138 @@
+"""Canonicalization and planner-selection tests."""
+
+import pytest
+
+from repro.core import CHILD, DESC, query
+from repro.core.query import paper_example_query
+from repro.data.graphs import random_labeled_graph
+from repro.engine import DeviceCaps, GraphStats, Planner, RigStats
+from repro.engine import canonical_form, canonical_key, parse
+
+
+# --------------------------------------------------------- canonical form
+def test_canonical_key_invariant_under_renaming():
+    q1 = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    q2 = parse("(x:L1)<-/-(w:L0), (x)-//->(y:L2)")   # same pattern, renamed
+    assert canonical_key(q1) == canonical_key(q2)
+
+
+def test_canonical_key_reduces_transitive_edges():
+    q = paper_example_query()
+    assert canonical_key(q) == canonical_key(q.full_form())
+
+
+def test_canonical_key_distinguishes_kinds_and_labels():
+    a = canonical_key(query([0, 1], [(0, 1, CHILD)]))
+    b = canonical_key(query([0, 1], [(0, 1, DESC)]))
+    c = canonical_key(query([0, 2], [(0, 1, CHILD)]))
+    assert len({a, b, c}) == 3
+
+
+def test_canonical_form_is_isomorphic():
+    q = parse("(a:L1)-/->(b:L0), (c:L1)-/->(b)")
+    cq, perm = canonical_form(q)
+    assert sorted(cq.labels) == sorted(q.labels)
+    assert cq.m == q.transitive_reduction().m
+    # perm maps old -> new consistently
+    for e in q.transitive_reduction().edges:
+        assert any(ce.src == perm[e.src] and ce.dst == perm[e.dst]
+                   and ce.kind == e.kind for ce in cq.edges)
+
+
+def test_canonical_form_idempotent():
+    q = parse("(a:L0)-//->(b:L1), (c:L0)-/->(b), (a)-//->(c)")
+    cq, _ = canonical_form(q)
+    cq2, _ = canonical_form(cq)
+    assert cq == cq2
+
+
+# --------------------------------------------------------------- planning
+def _stats(n_graph, n_labels=8, avg_degree=3.0, seed=0):
+    g = random_labeled_graph(n_graph, avg_degree=avg_degree,
+                             n_labels=n_labels, seed=seed)
+    return GraphStats.collect(g)
+
+
+def test_backend_small_graph_goes_host():
+    p = Planner(_stats(100)).plan(parse("(a:L0)-/->(b:L1)-//->(c:L2)"))
+    assert p.backend == "host"
+    assert any("below device threshold" in r for r in p.reasons)
+
+
+def test_backend_large_graph_goes_device():
+    p = Planner(_stats(2000)).plan(parse("(a:L0)-/->(b:L1)-//->(c:L2)"))
+    assert p.backend == "device"
+
+
+def test_backend_wide_query_goes_host_even_on_large_graph():
+    labels = list(range(8)) + [0]
+    edges = [(i, i + 1, CHILD) for i in range(8)]          # 9 nodes > max_q=8
+    p = Planner(_stats(2000)).plan(query(labels, edges))
+    assert p.backend == "host"
+    assert any("exceeds device caps" in r for r in p.reasons)
+
+
+def test_backend_forced():
+    p = Planner(_stats(100), force_backend="device").plan(
+        parse("(a:L0)-/->(b:L1)"))
+    assert p.backend == "device"
+
+
+def test_sim_algo_tiny_vs_regular():
+    planner = Planner(_stats(100))
+    assert planner.plan(parse("(a:L0)-/->(b:L1)")).sim_algo == "bas"
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2), (a)-//->(d:L3)-/->(c)")
+    assert planner.plan(q).sim_algo == "dagmap"
+
+
+def test_check_method_sparse_huge_graph():
+    s = _stats(1000)
+    s.n = 1 << 18                         # pretend: huge graph ...
+    s.label_counts = {l: 10 for l in s.label_counts}   # ... sparse labels
+    p = Planner(s).plan(parse("(a:L0)-/->(b:L1)-//->(c:L2)"))
+    assert p.check_method == "bititer"
+    assert Planner(_stats(1000)).plan(
+        parse("(a:L0)-/->(b:L1)-//->(c:L2)")).check_method == "bitbat"
+
+
+def test_cost_model_orders_by_label_frequency():
+    s = _stats(1000)
+    rare = min(s.label_counts, key=s.label_counts.get)
+    common = max(s.label_counts, key=s.label_counts.get)
+    q_rare = query([rare, rare], [(0, 1, DESC)])
+    q_common = query([common, common], [(0, 1, DESC)])
+    assert (s.estimate_cost(q_rare) < s.estimate_cost(q_common))
+
+
+def test_refine_tiny_rig_switches_to_host():
+    planner = Planner(_stats(2000))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    plan = planner.plan(q)
+    assert plan.backend == "device"
+    rig = RigStats()
+    rig.observe(rig_nodes=5, rig_edges=4, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=1)
+    refined = planner.refine(plan, q, rig)
+    assert refined.backend == "host"
+    # ... but an explicitly forced backend is never overridden
+    forced = Planner(_stats(2000), force_backend="device")
+    assert forced.refine(forced.plan(q), q, rig).backend == "device"
+
+
+def test_refine_keeps_device_for_large_rig():
+    planner = Planner(_stats(2000))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    plan = planner.plan(q)
+    rig = RigStats()
+    rig.observe(rig_nodes=900, rig_edges=4000, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=12345)
+    assert planner.refine(plan, q, rig).backend == "device"
+
+
+def test_plan_gm_options_realize_choices():
+    p = Planner(_stats(100)).plan(parse("(a:L0)-/->(b:L1)-//->(c:L2)"))
+    opts = p.gm_options(materialize=True)
+    assert opts.sim_algo == p.sim_algo
+    assert opts.check_method == p.check_method
+    assert opts.materialize
+    assert not opts.use_transitive_reduction   # engine reduces before GM
