@@ -1,0 +1,128 @@
+"""MJoin enumeration benchmark: backtrack vs frontier (vs frontier-device).
+
+Measures the two halves of the tentpole data path on an enumeration-heavy
+workload (>= 10^5 occurrences in standalone mode):
+
+* **RIG build** — vectorized node expansion into the compact
+  candidate-local bit matrices (one batched gather + column-compact per
+  query edge);
+* **enumeration** — the paper's one-tuple-at-a-time backtracking vs the
+  frontier-batched enumerator ((F, K, W) gathers, AND-reduce + popcount),
+  both counting-only and materializing.
+
+Standalone run writes the machine-readable baseline ``BENCH_mjoin.json``:
+
+  PYTHONPATH=src python -m benchmarks.bench_mjoin [--quick] [--device] \
+      [--out PATH]
+
+``--device`` adds the frontier-device path (the intersect Pallas kernel;
+interpreter mode off-TPU — only meaningful on real accelerators).
+CI runs quick mode as a smoke step (artifact uploaded, no perf assertion).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+from repro.core.mjoin import mjoin
+from repro.core.ordering import get_order
+from repro.core.rig import build_rig
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+
+from .common import Row
+
+
+def _workload(quick: bool):
+    """A dense-answer workload: few labels + descendant edges fan out the
+    candidate sets, so enumeration (not RIG build) dominates."""
+    n = 600 if quick else 4000
+    graph = random_labeled_graph(n, avg_degree=3.0, n_labels=2,
+                                 kind="powerlaw", seed=11)
+    graph.reachability()
+    graph.adj_bits(), graph.adj_bits_t()
+    q = random_query_from_graph(graph, n_nodes=4, qtype="D", seed=23,
+                                extra_edge_prob=0.3)
+    return graph, q
+
+
+def run(quick: bool = True, device: bool = False) -> List[Row]:
+    graph, q = _workload(quick)
+    qr = q.transitive_reduction()
+    rows: List[Row] = []
+
+    # ---- RIG build (vectorized expansion) -------------------------------
+    t0 = time.perf_counter()
+    rig = build_rig(graph, qr)
+    build_s = time.perf_counter() - t0
+    order = get_order(rig, "jo")
+    rows.append(Row("mjoin_build_rig", build_s * 1e6,
+                    {"rig_nodes": rig.n_nodes(), "rig_edges": rig.n_edges(),
+                     "graph_nodes": graph.n}))
+
+    # ---- enumeration ----------------------------------------------------
+    limit = None
+    methods = ["backtrack", "frontier"]
+    if device:
+        methods.append("frontier-device")
+    timings = {}
+    counts = {}
+    for method in methods:
+        for mat in (False, True):
+            reps = []
+            for _ in range(2 if quick else 3):
+                t0 = time.perf_counter()
+                res = mjoin(rig, order, limit=limit, materialize=mat,
+                            max_tuples=1_000_000, method=method)
+                reps.append(time.perf_counter() - t0)
+            dt = sorted(reps)[len(reps) // 2]
+            tag = f"mjoin_{method}" + ("_mat" if mat else "_count")
+            timings[tag] = dt
+            counts[tag] = res.count
+            rows.append(Row(tag, dt * 1e6, {
+                "results": res.count,
+                "ran": res.stats.method,
+                "truncated": res.stats.truncated,
+                "frontier_peak": res.stats.frontier_peak,
+                "results_per_s": round(res.count / max(dt, 1e-9))}))
+
+    assert len({counts[f"mjoin_{m}_count"] for m in methods}) == 1, counts
+    for mode in ("count", "mat"):
+        bt, fr = timings[f"mjoin_backtrack_{mode}"], \
+            timings[f"mjoin_frontier_{mode}"]
+        rows.append(Row(f"mjoin_speedup_{mode}", 0.0, {
+            "frontier_over_backtrack": round(bt / max(fr, 1e-9), 2)}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for the CI smoke step")
+    ap.add_argument("--device", action="store_true",
+                    help="also run the frontier-device (Pallas) path")
+    ap.add_argument("--out", default="BENCH_mjoin.json")
+    args = ap.parse_args()
+
+    rows = run(quick=args.quick, device=args.device)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    payload = {
+        "bench": "mjoin",
+        "mode": "quick" if args.quick else "full",
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 1),
+                  "derived": r.derived} for r in rows],
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,11 +13,12 @@ import sys
 import time
 
 from . import (bench_childcheck, bench_engine, bench_kernels, bench_labels,
-               bench_ordering, bench_queries, bench_rig, bench_scale,
-               bench_simulation, bench_transred)
+               bench_mjoin, bench_ordering, bench_queries, bench_rig,
+               bench_scale, bench_simulation, bench_transred)
 
 MODULES = {
     "engine": bench_engine,
+    "mjoin": bench_mjoin,
     "fig4_5_tab2_queries": bench_queries,
     "fig6_labels": bench_labels,
     "fig7_scale": bench_scale,

@@ -129,6 +129,53 @@ def union_rows(matrix: np.ndarray, idx: np.ndarray) -> np.ndarray:
     return np.bitwise_or.reduce(matrix[np.asarray(idx, dtype=np.int64)], axis=0)
 
 
+def gather_columns(matrix: np.ndarray, rows: np.ndarray, cols: np.ndarray,
+                   n: int, chunk_bytes: int = 1 << 25) -> np.ndarray:
+    """Gather + column-compact a packed bit matrix in one chunked pass:
+    ``(n, n_words(n))[rows] -> (len(rows), n_words(len(cols)))``.
+
+    Output row r has bit j set iff ``matrix[rows[r]]`` has bit ``cols[j]``
+    set — i.e. the selected rows re-expressed over the compact universe
+    ``cols`` (the candidate-local id spaces of the RIG).  Both the row
+    gather and the dense unpack happen per chunk so the transient slab
+    stays bounded (~``chunk_bytes``).
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    r = len(rows)
+    if len(cols) == 0 or r == 0:
+        return np.zeros((r, n_words(len(cols))), dtype=np.uint64)
+    out = np.empty((r, n_words(len(cols))), dtype=np.uint64)
+    step = max(1, chunk_bytes // max(n, 1))
+    for lo in range(0, r, step):
+        hi = min(lo + step, r)
+        out[lo:hi] = pack(unpack(matrix[rows[lo:hi]], n)[:, cols])
+    return out
+
+
+def transpose(matrix: np.ndarray, n_cols: int,
+              chunk_bytes: int = 1 << 25) -> np.ndarray:
+    """Packed transpose: (R, n_words(n_cols)) -> (n_cols, n_words(R)).
+
+    Bit (i, j) of the result equals bit (j, i) of the input.  Processed in
+    64-bit-aligned column blocks so the dense transient stays bounded.
+    """
+    r = matrix.shape[0]
+    out = np.empty((n_cols, n_words(r)), dtype=np.uint64)
+    if n_cols == 0:
+        return out
+    if r == 0:
+        out[:] = 0
+        return out
+    step_w = max(1, chunk_bytes // max(r * WORD, 1))       # words per block
+    for lo_w in range(0, matrix.shape[1], step_w):
+        hi_w = min(lo_w + step_w, matrix.shape[1])
+        dense = unpack(matrix[:, lo_w:hi_w], (hi_w - lo_w) * WORD)
+        lo, hi = lo_w * WORD, min(hi_w * WORD, n_cols)
+        out[lo:hi] = pack(np.ascontiguousarray(dense.T[: hi - lo]))
+    return out
+
+
 def matvec_any(matrix: np.ndarray, vec: np.ndarray) -> np.ndarray:
     """Boolean mat-vec: out[i] = (matrix[i] ∩ vec) ≠ ∅, for all rows at once.
 

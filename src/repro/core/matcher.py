@@ -35,6 +35,8 @@ class GMOptions:
     use_prefilter: bool = False
     check_method: str = "bitbat"         # binsearch | bititer | bitbat
     ordering: str = "jo"                 # jo | ri | bj
+    enum_method: str = "backtrack"       # backtrack | frontier | frontier-device
+    expand_method: str = "bitset"        # bitset | interval (§5.5 early term.)
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
     max_tuples: int = 1_000_000
@@ -52,6 +54,7 @@ class MatchResult:
     total_s: float
     sim_passes: int
     truncated: bool
+    enum_method: str = "backtrack"       # strategy that actually ran
     rig: Optional[RIG] = field(default=None, repr=False)
 
 
@@ -60,21 +63,30 @@ class GM:
     index and packed adjacency across queries — those are *data* indexes;
     the RIG itself is rebuilt per query, as in the paper)."""
 
-    def __init__(self, graph: DataGraph, options: Optional[GMOptions] = None):
+    def __init__(self, graph: DataGraph, options: Optional[GMOptions] = None,
+                 intervals=None):
         self.graph = graph
         self.options = options or GMOptions()
         self.oracle = EdgeOracle(graph)
+        # DFS interval labels for the §5.5 early-expansion-termination path
+        # (expand_method="interval"); the engine shares its per-graph labels
+        self.intervals = intervals
 
     def match(self, q: PatternQuery,
               options: Optional[GMOptions] = None) -> MatchResult:
         opt = options or self.options
+        if opt.expand_method == "interval" and self.intervals is None:
+            from .reachability import IntervalLabels
+            self.intervals = IntervalLabels.build(self.graph)
         t0 = time.perf_counter()
         if opt.use_transitive_reduction:
             q = q.transitive_reduction()
         rig = build_rig(self.graph, q, self.oracle,
                         sim_algo=opt.sim_algo, sim_passes=opt.sim_passes,
                         use_prefilter=opt.use_prefilter,
-                        check_method=opt.check_method)
+                        check_method=opt.check_method,
+                        expand_method=opt.expand_method,
+                        intervals=self.intervals)
         if rig.is_empty():
             t1 = time.perf_counter()
             return MatchResult(
@@ -83,19 +95,21 @@ class GM:
                 order=list(range(q.n)), rig_nodes=rig.n_nodes(), rig_edges=0,
                 matching_s=t1 - t0, enumerate_s=0.0, total_s=t1 - t0,
                 sim_passes=rig.sim.passes if rig.sim else 0, truncated=False,
-                rig=rig)
+                enum_method=opt.enum_method, rig=rig)
         order = get_order(rig, opt.ordering)
         t1 = time.perf_counter()
         res: MJoinResult = mjoin(rig, order, limit=opt.limit,
                                  materialize=opt.materialize,
-                                 max_tuples=opt.max_tuples)
+                                 max_tuples=opt.max_tuples,
+                                 method=opt.enum_method)
         t2 = time.perf_counter()
         return MatchResult(
             count=res.count, tuples=res.tuples, order=order,
             rig_nodes=rig.n_nodes(), rig_edges=rig.n_edges(),
             matching_s=t1 - t0, enumerate_s=t2 - t1, total_s=t2 - t0,
             sim_passes=rig.sim.passes if rig.sim else 0,
-            truncated=res.stats.truncated, rig=rig)
+            truncated=res.stats.truncated, enum_method=res.stats.method,
+            rig=rig)
 
 
 def match(graph: DataGraph, q: PatternQuery, **kwargs) -> MatchResult:

@@ -1,21 +1,32 @@
 """MJoin — multiway intersection-based occurrence enumeration (Alg. 5, §6).
 
-Backtracking over a search order; at recursion level *i* the candidate set
-for query node q_i is the intersection of
+At enumeration position *i* the candidate set for query node q_i is the
+intersection of ``cos(q_i)`` (the RIG node set) and one RIG adjacency row
+per already-bound neighbour of q_i — a true multiway join with no binary
+intermediate results.  Worst-case optimal (Thm. 2/3: runtime within the
+AGM bound of the RIG edge relations).
 
-* ``cos(q_i)`` (the RIG node set), and
-* one RIG adjacency row per already-bound neighbour of q_i,
+Two enumeration strategies over the compact candidate-local RIG layout:
 
-realized as packed-bitset ANDs — a true multiway join with no binary-join
-intermediate results.  Worst-case optimal (Thm. 2/3: runtime within the AGM
-bound of the RIG edge relations; space O(n · MaxNq)).
+* ``backtrack`` — the paper's one-tuple-at-a-time depth-first search.
+  ``cos`` is the all-ones set in local space, so each level is K gathered
+  rows AND-reduced (K = bound neighbours of q_i).
+* ``frontier`` / ``frontier-device`` — level-synchronous batched
+  enumeration: an ``(F, level)`` table of partial assignments is extended
+  one position at a time; the K constraint rows of the *whole frontier*
+  are gathered into ``(F, K, W)`` and AND-reduced + popcounted in one call
+  (numpy host path, or the ``intersect`` Pallas kernel on device).
+  Frontier slabs bound the transient gather memory; both strategies
+  enumerate in the same lexicographic order, so ``limit`` / ``max_tuples``
+  / truncation semantics are preserved exactly.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional
+import warnings
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -23,15 +34,22 @@ from . import bitset
 from .rig import RIG
 
 DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
+ENUM_METHODS = ("backtrack", "frontier", "frontier-device")
+
+_FRONTIER_SLAB = 8192        # frontier rows per gather slab (memory bound)
+_MAT_INIT = 1024             # initial materialization buffer rows
 
 
 @dataclass
 class MJoinStats:
     results: int = 0
     expanded: int = 0            # partial assignments explored
-    intersections: int = 0
+    intersections: int = 0       # constraint-row ANDs (per partial, per row)
     truncated: bool = False      # hit the result limit
     enumerate_s: float = 0.0
+    method: str = "backtrack"    # strategy that actually ran
+    frontier_peak: int = 0       # widest frontier level (frontier methods)
+    device_calls: int = 0        # intersect-kernel dispatches (device method)
 
 
 @dataclass
@@ -42,54 +60,95 @@ class MJoinResult:
     order: List[int]
 
 
-def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
-          materialize: bool = True, max_tuples: int = 1_000_000) -> MJoinResult:
-    """Enumerate (or count) the occurrences encoded by ``rig``.
+class FrontierOverflow(RuntimeError):
+    """Raised when a frontier level exceeds ``max_frontier`` rows; the
+    driver falls back to the constant-space backtracking strategy."""
 
-    ``limit`` bounds the number of results visited (None = exhaustive);
-    ``max_tuples`` bounds materialization only (counting continues).
+
+# ------------------------------------------------------------------ helpers
+def _constraints(q, order: List[int]) -> List[List[Tuple[int, int, bool]]]:
+    """constraints[i]: list of (prefix_position, edge_index, is_forward).
+
+    is_forward=True  => edge (order[j] -> order[i]): row = rig.fwd[e][t_j]
+    is_forward=False => edge (order[i] -> order[j]): row = rig.bwd[e][t_j]
     """
-    q = rig.query
-    n = q.n
-    t0 = time.perf_counter()
-    stats = MJoinStats()
-
-    if rig.is_empty():
-        return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
-                           else None, stats, order)
-
     pos = {qi: i for i, qi in enumerate(order)}
-    # constraints[i]: list of (prefix_position, edge_index, is_forward)
-    #   is_forward=True  => edge (order[j] -> order[i]): row = rig.fwd[e][t_j]
-    #   is_forward=False => edge (order[i] -> order[j]): row = rig.bwd[e][t_j]
-    constraints: List[List[tuple]] = [[] for _ in range(n)]
+    cons: List[List[Tuple[int, int, bool]]] = [[] for _ in range(q.n)]
     for ei, e in enumerate(q.edges):
         ps, pd = pos[e.src], pos[e.dst]
         if ps < pd:
-            constraints[pd].append((ps, ei, True))
+            cons[pd].append((ps, ei, True))
         else:
-            constraints[ps].append((pd, ei, False))
+            cons[ps].append((pd, ei, False))
+    return cons
 
-    nW = bitset.n_words(rig.n_graph)
-    t = np.full(n, -1, dtype=np.int64)           # assignment in *order* positions
-    cand_lists: List[np.ndarray] = [np.empty(0, np.int64)] * n
+
+def _to_query_order(assign: np.ndarray, order: List[int],
+                    cand: List[np.ndarray]) -> np.ndarray:
+    """Local-id rows in order-position layout -> global-id tuples in
+    query-node order (vectorized over all rows per position)."""
+    k = assign.shape[0]
+    out = np.empty((k, len(order)), dtype=np.int64)
+    for p, qi in enumerate(order):
+        out[:, qi] = cand[qi][assign[:, p]]
+    return out
+
+
+_DEVICE = None
+_DEVICE_FAILED = False
+
+
+def _device_intersector():
+    """The jax/Pallas frontier executor, or None if jax is unavailable."""
+    global _DEVICE, _DEVICE_FAILED
+    if _DEVICE is None and not _DEVICE_FAILED:
+        try:
+            from ..jaxgm.frontier import DeviceIntersector
+            _DEVICE = DeviceIntersector()
+        except Exception as e:                      # pragma: no cover - env
+            _DEVICE_FAILED = True
+            warnings.warn(
+                f"frontier-device unavailable ({type(e).__name__}: {e}); "
+                f"falling back to the host frontier path", RuntimeWarning,
+                stacklevel=3)
+    return _DEVICE
+
+
+# ---------------------------------------------------------------- backtrack
+def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
+                     materialize: bool, max_tuples: int,
+                     stats: MJoinStats) -> Tuple[int, Optional[np.ndarray]]:
+    n = rig.query.n
+    sizes = [rig.cos_size(qi) for qi in order]
+    all_ids = [np.arange(s, dtype=np.int64) for s in sizes]
+    empty = np.empty(0, dtype=np.int64)
+
+    t = np.full(n, -1, dtype=np.int64)       # local ids, order positions
+    cand_lists: List[np.ndarray] = [empty] * n
     cursors = np.zeros(n, dtype=np.int64)
-    out: List[np.ndarray] = []
     count = 0
 
+    # pre-sized growable materialization buffer (local ids, order layout)
+    buf = np.empty((min(_MAT_INIT, max_tuples), n), dtype=np.int64)
+    n_mat = 0
+
     def candidates(i: int) -> np.ndarray:
-        qi = order[i]
-        acc = rig.cos[qi]
-        for (j, ei, isf) in constraints[i]:
-            adj = rig.fwd[ei] if isf else rig.bwd[ei]
-            row = adj.get(int(t[j]))
-            if row is None:
-                return np.empty(0, dtype=np.int64)
-            acc = acc & row
-            stats.intersections += 1
-            if not acc.any():
-                return np.empty(0, dtype=np.int64)
-        return bitset.to_indices(acc, rig.n_graph)
+        cs = cons[i]
+        if not cs:
+            return all_ids[i]
+        j, ei, isf = cs[0]
+        acc = (rig.fwd[ei] if isf else rig.bwd[ei])[t[j]]
+        stats.intersections += 1
+        if len(cs) > 1:
+            acc = acc.copy()
+            for (j, ei, isf) in cs[1:]:
+                acc &= (rig.fwd[ei] if isf else rig.bwd[ei])[t[j]]
+                stats.intersections += 1
+                if not acc.any():
+                    return empty
+        elif not acc.any():
+            return empty
+        return bitset.to_indices(acc, sizes[i])
 
     i = 0
     cand_lists[0] = candidates(0)
@@ -109,18 +168,201 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
         stats.expanded += 1
         if i == n - 1:
             count += 1
-            if materialize and len(out) < max_tuples:
-                tup = np.empty(n, dtype=np.int64)
-                tup[np.array(order)] = t          # back to query-node order
-                out.append(tup)
+            if materialize and n_mat < max_tuples:
+                if n_mat == len(buf):                  # amortized growth
+                    buf = np.vstack([buf, np.empty_like(buf)])
+                buf[n_mat] = t
+                n_mat += 1
             cursors[i] += 1
             continue
         i += 1
         cand_lists[i] = candidates(i)
         cursors[i] = 0
 
+    tuples = _to_query_order(buf[:n_mat], order, rig.cand) \
+        if materialize else None
+    return count, tuples
+
+
+# ----------------------------------------------------------------- frontier
+def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
+                    intersector, stats: MJoinStats):
+    """Gather the K constraint rows for one frontier slab and AND-reduce.
+
+    Returns ``(acc, counts)``: the packed candidate rows (f, W) plus, on
+    the device path, the kernel's fused per-row popcounts (None on the
+    host path — computed lazily only where needed).  ``cs`` is non-empty
+    (K >= 1); each constraint contributes one gathered row per frontier
+    entry.
+    """
+    stats.intersections += len(cs) * len(slab)
+    if intersector is not None:
+        rows = np.stack([(rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
+                         for (j, ei, isf) in cs], axis=1)    # (f, K, W)
+        acc, counts = intersector(rows)
+        stats.device_calls += 1
+        return acc, counts
+    j, ei, isf = cs[0]
+    acc = (rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]  # gather = copy
+    for (j, ei, isf) in cs[1:]:
+        acc &= (rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
+    return acc, None
+
+
+def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
+                    materialize: bool, max_tuples: int, stats: MJoinStats,
+                    device: bool, max_frontier: int
+                    ) -> Tuple[int, Optional[np.ndarray]]:
+    n = rig.query.n
+    sizes = [rig.cos_size(qi) for qi in order]
+    intersector = _device_intersector() if device else None
+    if device and intersector is None:
+        stats.method = "frontier"                    # jax missing: host path
+
+    # number of results to visit / to materialize
+    mat_cap = max_tuples if limit is None else min(max_tuples, limit)
+    mat_blocks: List[np.ndarray] = []
+    n_mat = 0
+    count = 0
+
+    frontier = np.arange(sizes[0], dtype=np.int64)[:, None]   # (F, 1)
+    stats.frontier_peak = len(frontier)
+    stats.expanded += len(frontier)
+
+    if n == 1:
+        count = sizes[0]
+        if limit is not None and count >= limit:
+            count = limit
+            stats.truncated = True
+        if materialize:
+            mat_blocks.append(frontier[:min(count, mat_cap)])
+            n_mat = len(mat_blocks[0])
+    else:
+        for i in range(1, n):
+            last = i == n - 1
+            n_i = sizes[i]
+            cs = cons[i]
+            new_parts: List[np.ndarray] = []
+            new_rows = 0
+            done = False
+            # slab rows bounded by both the row count and the dense unpack
+            # width, so the per-slab transient stays ~32 MB even for huge
+            # candidate sets
+            slab_rows = max(1, min(_FRONTIER_SLAB,
+                                   (1 << 25) // max(n_i, 1)))
+            for lo in range(0, len(frontier), slab_rows):
+                slab = frontier[lo:lo + slab_rows]
+                counts = None
+                if cs:
+                    acc, counts = _slab_intersect(rig, cs, slab,
+                                                  intersector, stats)
+                    bits = None
+                else:                      # disconnected pattern: cartesian
+                    acc = None
+                    bits = np.ones((len(slab), n_i), dtype=bool)
+                if last:
+                    if counts is None:
+                        counts = (bitset.count_rows(acc) if acc is not None
+                                  else np.full(len(slab), n_i,
+                                               dtype=np.int64))
+                    slab_total = int(counts.sum())
+                    want = min(mat_cap - n_mat, slab_total) \
+                        if materialize else 0
+                    if want > 0:
+                        if bits is None:
+                            bits = bitset.unpack(acc, n_i)
+                        rid, cid = np.nonzero(bits)
+                        block = np.concatenate(
+                            [slab[rid[:want]],
+                             cid[:want, None].astype(np.int64)], axis=1)
+                        mat_blocks.append(block)
+                        n_mat += len(block)
+                    count += slab_total
+                    stats.expanded += slab_total
+                    if limit is not None and count >= limit:
+                        stats.expanded -= count - limit
+                        count = limit
+                        stats.truncated = True
+                        done = True
+                        break
+                else:
+                    if bits is None:
+                        bits = bitset.unpack(acc, n_i)
+                    rid, cid = np.nonzero(bits)
+                    if len(rid):
+                        new_parts.append(np.concatenate(
+                            [slab[rid], cid[:, None].astype(np.int64)],
+                            axis=1))
+                        new_rows += len(rid)
+                        # enforce the bound *while* accumulating — before
+                        # the oversized level is ever materialized whole
+                        if new_rows > max_frontier:
+                            raise FrontierOverflow(
+                                f"frontier level {i} exceeds "
+                                f"max_frontier={max_frontier} rows")
+            if done or last:
+                break
+            frontier = (np.vstack(new_parts) if new_parts
+                        else np.empty((0, i + 1), dtype=np.int64))
+            stats.frontier_peak = max(stats.frontier_peak, len(frontier))
+            stats.expanded += len(frontier)
+            if len(frontier) == 0:
+                break
+
+    tuples = None
+    if materialize:
+        assign = (np.vstack(mat_blocks) if mat_blocks
+                  else np.empty((0, n), dtype=np.int64))
+        tuples = _to_query_order(assign, order, rig.cand)
+    return count, tuples
+
+
+# ---------------------------------------------------------------------- API
+def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
+          materialize: bool = True, max_tuples: int = 1_000_000,
+          method: str = "backtrack",
+          max_frontier: int = 1 << 25) -> MJoinResult:
+    """Enumerate (or count) the occurrences encoded by ``rig``.
+
+    ``limit`` bounds the number of results visited (None = exhaustive);
+    ``max_tuples`` bounds materialization only (counting continues);
+    ``method`` picks the enumeration strategy (see module docstring) —
+    a frontier level wider than ``max_frontier`` rows falls back to
+    ``backtrack`` to keep memory bounded.
+    """
+    if method not in ENUM_METHODS:
+        raise ValueError(f"unknown enum method: {method!r} "
+                         f"(expected one of {ENUM_METHODS})")
+    q = rig.query
+    n = q.n
+    t0 = time.perf_counter()
+    stats = MJoinStats(method=method)
+
+    if rig.is_empty():
+        stats.enumerate_s = time.perf_counter() - t0
+        return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
+                           else None, stats, order)
+    if limit is not None and limit <= 0:     # visit budget exhausted upfront
+        stats.truncated = True
+        stats.enumerate_s = time.perf_counter() - t0
+        return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
+                           else None, stats, order)
+
+    cons = _constraints(q, order)
+    if method == "backtrack":
+        count, tuples = _mjoin_backtrack(rig, order, cons, limit,
+                                         materialize, max_tuples, stats)
+    else:
+        try:
+            count, tuples = _mjoin_frontier(
+                rig, order, cons, limit, materialize, max_tuples, stats,
+                device=(method == "frontier-device"),
+                max_frontier=max_frontier)
+        except FrontierOverflow:
+            stats = MJoinStats(method="backtrack")   # strategy that ran
+            count, tuples = _mjoin_backtrack(rig, order, cons, limit,
+                                             materialize, max_tuples, stats)
+
     stats.results = count
     stats.enumerate_s = time.perf_counter() - t0
-    tuples = (np.stack(out) if out else np.empty((0, n), dtype=np.int64)) \
-        if materialize else None
     return MJoinResult(count=count, tuples=tuples, stats=stats, order=order)

@@ -72,7 +72,7 @@ def order_bj(rig: RIG, max_nodes: int = 14) -> Optional[List[int]]:
     # per-edge selectivity estimate: |occ(e)| / (|cos(src)| * |cos(dst)|)
     sel = {}
     for ei, e in enumerate(q.edges):
-        occ = sum(np.bitwise_count(r).sum() for r in rig.fwd[ei].values())
+        occ = rig.edge_count(ei)
         denom = sizes[e.src] * sizes[e.dst]
         sel[(e.src, e.dst)] = float(occ) / denom if denom else 0.0
 

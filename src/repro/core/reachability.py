@@ -94,6 +94,36 @@ def strongly_connected_components(graph: DataGraph):
     return comp, n_comps
 
 
+# ------------------------------------------------------- condensation utils
+def _condensation_csr(comp: np.ndarray, n_comps: int, edges: np.ndarray,
+                      reverse: bool = False):
+    """Deduplicated condensation-DAG adjacency as CSR ``(indptr, succs)``.
+
+    Vectorized: maps every data edge to its component pair, drops
+    intra-component pairs, and dedupes with one ``np.unique`` over the
+    pair array (no per-edge Python loop).
+    """
+    if len(edges) == 0:
+        return np.zeros(n_comps + 1, dtype=np.int64), \
+            np.empty(0, dtype=np.int64)
+    cs = comp[edges[:, 0]]
+    cd = comp[edges[:, 1]]
+    if reverse:
+        cs, cd = cd, cs
+    keep = cs != cd
+    pairs = np.unique(np.stack([cs[keep], cd[keep]], axis=1), axis=0)
+    indptr = np.searchsorted(pairs[:, 0], np.arange(n_comps + 1))
+    return indptr, pairs[:, 1]
+
+
+def _self_loop_mask(graph: DataGraph) -> np.ndarray:
+    mask = np.zeros(graph.n, dtype=bool)
+    if graph.n_edges:
+        sl = graph.edges[:, 0] == graph.edges[:, 1]
+        mask[graph.edges[sl, 0]] = True
+    return mask
+
+
 # ------------------------------------------------------------------- closure
 @dataclass
 class ReachabilityIndex:
@@ -107,52 +137,48 @@ class ReachabilityIndex:
     n: int
     comp: np.ndarray              # (n,) component id, topologically numbered
     reach_bits: np.ndarray        # (n, W) packed, node-level closure
+    comp_sizes: np.ndarray = None  # (n_comps,) members per component
     reach_bits_t: Optional[np.ndarray] = None   # transpose, built lazily
 
     @staticmethod
     def build(graph: DataGraph) -> "ReachabilityIndex":
         n = graph.n
         comp, n_comps = strongly_connected_components(graph)
-
-        # --- condensation DAG edges + member lists
-        members: list[list[int]] = [[] for _ in range(n_comps)]
-        for v in range(n):
-            members[comp[v]].append(v)
+        comp_sizes = np.bincount(comp, minlength=n_comps)
 
         W = bitset.n_words(n)
-        # creach[c] = packed set of *data nodes* reachable from component c,
-        # including c's own members iff |c| > 1 (cycle) — strictness handled
-        # at node level below.
-        creach = np.zeros((n_comps, W), dtype=np.uint64)
-        csucc: list[set] = [set() for _ in range(n_comps)]
-        if graph.n_edges:
-            cs = comp[graph.edges[:, 0]]
-            cd = comp[graph.edges[:, 1]]
-            for a, b in zip(cs, cd):
-                if a != b:
-                    csucc[a].add(int(b))
-
-        # members packed per component
+        # members packed per component — one vectorized bit scatter
         cmembers = np.zeros((n_comps, W), dtype=np.uint64)
-        for c in range(n_comps):
-            cmembers[c] = bitset.from_indices(np.array(members[c]), n)
+        if n:
+            v = np.arange(n)
+            np.bitwise_or.at(cmembers, (comp, v >> 6),
+                             np.uint64(1) << (v & 63).astype(np.uint64))
 
-        # reverse topological order = descending component id
+        indptr, succs = _condensation_csr(comp, n_comps, graph.edges)
+        # components whose members are self-reachable: non-trivial SCCs and
+        # singleton components carrying a self loop
+        has_loop = np.zeros(n_comps, dtype=bool)
+        has_loop[comp[_self_loop_mask(graph)]] = True
+        own = (comp_sizes > 1) | has_loop
+
+        # creach[c] = packed set of *data nodes* reachable from component c,
+        # including c's own members iff it is cyclic — strictness handled
+        # at node level below.  Reverse topological order = descending id.
+        creach = np.zeros((n_comps, W), dtype=np.uint64)
         for c in range(n_comps - 1, -1, -1):
-            acc = np.zeros(W, dtype=np.uint64)
-            for s in csucc[c]:
-                acc |= creach[s] | cmembers[s]
-            if len(members[c]) > 1:
-                acc |= cmembers[c]
+            row = succs[indptr[c]:indptr[c + 1]]
+            if len(row):
+                acc = np.bitwise_or.reduce(creach[row] | cmembers[row],
+                                           axis=0)
             else:
-                # single-node component: self-reachable iff self loop
-                v = members[c][0]
-                if graph.has_edge(v, v):
-                    acc |= cmembers[c]
+                acc = np.zeros(W, dtype=np.uint64)
+            if own[c]:
+                acc |= cmembers[c]
             creach[c] = acc
 
         reach = creach[comp]  # (n, W): every node inherits its component row
-        return ReachabilityIndex(n=n, comp=comp, reach_bits=reach)
+        return ReachabilityIndex(n=n, comp=comp, reach_bits=reach,
+                                 comp_sizes=comp_sizes)
 
     # ------------------------------------------------------------- interface
     def reaches(self, u: int, v: int) -> bool:
@@ -177,10 +203,16 @@ class ReachabilityIndex:
 # ------------------------------------------------------------ interval labels
 @dataclass
 class IntervalLabels:
-    """DFS (begin, end) intervals on a DAG (paper §5.5, early termination).
+    """DFS (begin, end) intervals (paper §5.5, early expansion termination).
 
     Guarantee used: if ``end[u] < begin[v]`` then u does not reach v.
     (The converse does not hold — it is a pruning filter only.)
+
+    Built on the SCC *condensation* DAG, with every node inheriting its
+    component's interval — this keeps the guarantee sound on arbitrary
+    digraphs (within one SCC ``begin <= end`` always holds, so the filter
+    never prunes a cyclic pair), which BuildRIG's interval expansion path
+    relies on.
     """
 
     begin: np.ndarray
@@ -188,14 +220,18 @@ class IntervalLabels:
 
     @staticmethod
     def build(graph: DataGraph) -> "IntervalLabels":
-        n = graph.n
-        begin = np.full(n, -1, dtype=np.int64)
-        end = np.full(n, -1, dtype=np.int64)
+        comp, n_comps = strongly_connected_components(graph)
+        indptr, succs = _condensation_csr(comp, n_comps, graph.edges)
+
+        begin = np.full(n_comps, -1, dtype=np.int64)
+        end = np.full(n_comps, -1, dtype=np.int64)
         clock = 0
-        indptr, indices = graph.fwd_indptr, graph.fwd_indices
-        roots = [v for v in range(n) if graph.bwd_indptr[v] == graph.bwd_indptr[v + 1]]
-        visited = np.zeros(n, dtype=bool)
-        for root in (roots + list(range(n))):
+        indeg = np.zeros(n_comps, dtype=np.int64)
+        if len(succs):
+            indeg += np.bincount(succs, minlength=n_comps)
+        roots = np.nonzero(indeg == 0)[0]
+        visited = np.zeros(n_comps, dtype=bool)
+        for root in (*roots, *range(n_comps)):
             if visited[root]:
                 continue
             stack = [(int(root), int(indptr[root]))]
@@ -206,7 +242,7 @@ class IntervalLabels:
                 v, ptr = stack[-1]
                 if ptr < indptr[v + 1]:
                     stack[-1] = (v, ptr + 1)
-                    w = int(indices[ptr])
+                    w = int(succs[ptr])
                     if not visited[w]:
                         visited[w] = True
                         begin[w] = clock
@@ -217,13 +253,13 @@ class IntervalLabels:
                     end[v] = clock
                     clock += 1
         # propagate: end must cover all descendants even via cross edges.
-        # One reverse-topological max-fold makes the filter exact on DAGs.
-        order = np.argsort(begin)  # begin times are a valid DFS order
-        for v in order[::-1]:
-            ch = indices[indptr[v]:indptr[v + 1]]
-            if len(ch):
-                end[v] = max(int(end[v]), int(end[ch].max()))
-        return IntervalLabels(begin=begin, end=end)
+        # Component ids are topologically numbered, so one descending-id
+        # max-fold makes the filter exact on the condensation.
+        for c in range(n_comps - 1, -1, -1):
+            row = succs[indptr[c]:indptr[c + 1]]
+            if len(row):
+                end[c] = max(int(end[c]), int(end[row].max()))
+        return IntervalLabels(begin=begin[comp], end=end[comp])
 
     def cannot_reach(self, u: int, v: int) -> bool:
         return bool(self.end[u] < self.begin[v])
@@ -249,6 +285,8 @@ class BFL:
     lin: np.ndarray            # (n, bits/64) packed bloom of ancestors
     topo: np.ndarray           # (n,) topological rank of the node's component
     graph: DataGraph
+    comp_sizes: np.ndarray = None   # (n_comps,) members per component
+    self_loop: np.ndarray = None    # (n,) node has a self loop
 
     stats_probes: int = 0
     stats_dfs: int = 0
@@ -257,39 +295,37 @@ class BFL:
     def build(graph: DataGraph, bits: int = 256, seed: int = 0) -> "BFL":
         n = graph.n
         comp, n_comps = strongly_connected_components(graph)
+        comp_sizes = np.bincount(comp, minlength=n_comps)
         rng = np.random.default_rng(seed)
         hash_ = rng.integers(0, bits, size=n, dtype=np.int64)
         W = bits // 64
         assert bits % 64 == 0
 
-        self_bloom = np.zeros((n, W), dtype=np.uint64)
-        np.bitwise_or.at(
-            self_bloom, (np.arange(n), hash_ >> 6),
-            np.uint64(1) << (hash_ & 63).astype(np.uint64))
-
-        # component-level aggregation
+        # component-level bloom of member hashes — one vectorized scatter
         cbloom_out = np.zeros((n_comps, W), dtype=np.uint64)
-        cbloom_in = np.zeros((n_comps, W), dtype=np.uint64)
-        for v in range(n):
-            cbloom_out[comp[v]] |= self_bloom[v]
-            cbloom_in[comp[v]] |= self_bloom[v]
-        csucc: list[set] = [set() for _ in range(n_comps)]
-        cpred: list[set] = [set() for _ in range(n_comps)]
-        if graph.n_edges:
-            for a, b in zip(comp[graph.edges[:, 0]], comp[graph.edges[:, 1]]):
-                if a != b:
-                    csucc[int(a)].add(int(b))
-                    cpred[int(b)].add(int(a))
+        if n:
+            np.bitwise_or.at(
+                cbloom_out, (comp, hash_ >> 6),
+                np.uint64(1) << (hash_ & 63).astype(np.uint64))
+        cbloom_in = cbloom_out.copy()
+
+        indptr, succs = _condensation_csr(comp, n_comps, graph.edges)
+        rptr, preds = _condensation_csr(comp, n_comps, graph.edges,
+                                        reverse=True)
         for c in range(n_comps - 1, -1, -1):
-            for s in csucc[c]:
-                cbloom_out[c] |= cbloom_out[s]
+            row = succs[indptr[c]:indptr[c + 1]]
+            if len(row):
+                cbloom_out[c] |= np.bitwise_or.reduce(cbloom_out[row],
+                                                      axis=0)
         for c in range(n_comps):
-            for p in cpred[c]:
-                cbloom_in[c] |= cbloom_in[p]
+            row = preds[rptr[c]:rptr[c + 1]]
+            if len(row):
+                cbloom_in[c] |= np.bitwise_or.reduce(cbloom_in[row], axis=0)
 
         return BFL(n=n, bits=bits, comp=comp, hash_=hash_,
                    lout=cbloom_out[comp], lin=cbloom_in[comp],
-                   topo=comp.astype(np.int64), graph=graph)
+                   topo=comp.astype(np.int64), graph=graph,
+                   comp_sizes=comp_sizes, self_loop=_self_loop_mask(graph))
 
     def _bloom_neg(self, u: int, v: int) -> bool:
         """True => definitely NOT reachable."""
@@ -305,10 +341,12 @@ class BFL:
         self.stats_probes += 1
         cu, cv = self.comp[u], self.comp[v]
         if cu == cv:
-            # same SCC: reachable iff the SCC is non-trivial or self-loop
+            # same SCC: reachable iff the SCC is non-trivial or self-loop.
+            # Component sizes are precomputed in build — this probe used to
+            # rescan the whole comp array (O(n) per reaches call).
             if u == v:
-                return self.graph.has_edge(u, u) or _scc_nontrivial(self.comp, cu)
-            return _scc_nontrivial(self.comp, cu)
+                return bool(self.self_loop[u]) or self.comp_sizes[cu] >= 2
+            return bool(self.comp_sizes[cu] >= 2)
         if self.topo[u] > self.topo[v]:   # topological filter
             return False
         if self._bloom_neg(u, v):
@@ -332,8 +370,3 @@ class BFL:
                 seen.add(w)
                 stack.append(w)
         return False
-
-
-def _scc_nontrivial(comp: np.ndarray, c: int) -> bool:
-    # an SCC is non-trivial iff it has >= 2 members
-    return int((comp == c).sum()) >= 2

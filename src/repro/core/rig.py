@@ -8,15 +8,23 @@ on-the-fly per query — never persisted.
 
 BuildRIG = *node selection* (double simulation — existence semantics)
 followed by *node expansion* (materialize adjacency — all-matches semantics).
-During expansion the outgoing/incoming edges of every candidate are indexed
-by query edge, enabling the multiway adjacency-list intersections of MJoin.
+
+Layout: the RIG is stored *candidate-locally*.  Per query node q, ``cos(q)``
+is remapped onto the compact id space ``0..|cos(q)|-1`` (``cand[q][i]`` is
+the data-graph node of local id ``i``, sorted ascending), and every query
+edge's adjacency is one contiguous packed bit **matrix**
+``uint64[|cos(src)|, n_words(|cos(dst)|)]`` — row i = the dst-local
+successor set of src-local candidate i.  Compared to a dict of
+full-universe bitsets this shrinks every row universe from |V_G| to
+|cos(q)|, removes all dict lookups from the MJoin hot loop, and makes the
+per-level constraint rows a single ``matrix[frontier]`` gather.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Literal, Optional
+from dataclasses import dataclass
+from typing import List, Literal, Optional
 
 import numpy as np
 
@@ -32,41 +40,48 @@ SimAlgo = Literal["bas", "dag", "dagmap", "none"]
 
 @dataclass
 class RIG:
-    """Materialized runtime index graph.
+    """Materialized runtime index graph (compact candidate-local layout).
 
-    ``fwd[e][v]`` / ``bwd[e][u]`` are packed bitsets: the RIG adjacency of a
-    candidate w.r.t. query edge index ``e`` — already restricted to the
-    candidate sets of both endpoints, so MJoin candidate generation is a pure
-    multiway AND of these rows (plus ``cos``).
+    ``fwd[e]`` is a packed bit matrix ``(|cos(src)|, n_words(|cos(dst)|))``:
+    row i = RIG successors of src candidate ``cand[src][i]`` w.r.t. query
+    edge ``e``, expressed as *dst-local* ids.  ``bwd[e]`` is its packed
+    transpose.  Rows are already restricted to both endpoints' candidate
+    sets, so MJoin candidate generation is a pure multiway AND of gathered
+    rows — ``cos`` itself is the all-ones set in local space.
     """
 
     query: PatternQuery
     n_graph: int
-    cos: List[np.ndarray]                    # packed candidate sets per q-node
-    fwd: List[Dict[int, np.ndarray]]         # per edge: src candidate -> row
-    bwd: List[Dict[int, np.ndarray]]         # per edge: dst candidate -> row
+    cand: List[np.ndarray]         # cos(q) as sorted data-node ids:
+                                   #   local id -> global node
+    fwd: List[np.ndarray]          # per edge: uint64 (|cos(src)|, W_dst)
+    bwd: List[np.ndarray]          # per edge: uint64 (|cos(dst)|, W_src)
     sim: Optional[SimResult] = None
     build_select_s: float = 0.0
     build_expand_s: float = 0.0
 
     def cos_indices(self, q: int) -> np.ndarray:
-        return bitset.to_indices(self.cos[q], self.n_graph)
+        return self.cand[q]
 
     def cos_size(self, q: int) -> int:
-        return bitset.count(self.cos[q])
+        return len(self.cand[q])
 
     def n_nodes(self) -> int:
-        return sum(self.cos_size(q) for q in range(self.query.n))
+        return sum(len(c) for c in self.cand)
+
+    def edge_count(self, e: int) -> int:
+        """Number of RIG edges materialized for query edge ``e``."""
+        return bitset.count(self.fwd[e])
 
     def n_edges(self) -> int:
-        return sum(sum(bitset.count(row) for row in d.values()) for d in self.fwd)
+        return sum(self.edge_count(e) for e in range(len(self.fwd)))
 
     def size(self) -> int:
         """Paper's graph-size metric: |nodes| + |edges|."""
         return self.n_nodes() + self.n_edges()
 
     def is_empty(self) -> bool:
-        return any(self.cos_size(q) == 0 for q in range(self.query.n))
+        return any(len(c) == 0 for c in self.cand)
 
 
 # ----------------------------------------------------------- node prefilter
@@ -146,43 +161,45 @@ def build_rig(graph: DataGraph, q: PatternQuery,
         cos = sim.fb
         if use_prefilter:
             cos = [a & b for a, b in zip(cos, fb0)]
+    n = graph.n
+    cand = [bitset.to_indices(c, n) for c in cos]
     t1 = time.perf_counter()
 
-    # ---- phase (b): node expansion
-    fwd: List[Dict[int, np.ndarray]] = []
-    bwd: List[Dict[int, np.ndarray]] = []
-    n = graph.n
+    # ---- phase (b): node expansion — one batched gather + column-compact
+    # per query edge: rows = oracle matrix gathered at all src candidates,
+    # restricted to dst candidates by the column gather itself (selecting
+    # exactly the dst-candidate columns IS the AND against cos(dst)).
+    fwd: List[np.ndarray] = []
+    bwd: List[np.ndarray] = []
     for e in q.edges:
-        f: Dict[int, np.ndarray] = {}
-        b: Dict[int, np.ndarray] = {}
-        src_idx = bitset.to_indices(cos[e.src], n)
-        dst_bits = cos[e.dst]
-        if expand_method == "interval" and intervals is not None and e.kind == DESC:
-            dst_idx = bitset.to_indices(dst_bits, n)
-            order = np.argsort(intervals.begin[dst_idx])
-            dst_sorted = dst_idx[order]
-            begins = intervals.begin[dst_sorted]
-            for v in src_idx:
-                # early expansion termination: stop once begin(v_q) > end(v_p)
-                hi = int(np.searchsorted(begins, intervals.end[int(v)],
-                                         side="right"))
-                cand = dst_sorted[:hi]
-                row = oracle.fwd_row(int(v), e.kind)
-                sel = cand[bitset.unpack(row, n)[cand]]
-                f[int(v)] = bitset.from_indices(sel, n)
+        src_idx, dst_idx = cand[e.src], cand[e.dst]
+        s_n, d_n = len(src_idx), len(dst_idx)
+        if s_n == 0 or d_n == 0:
+            fwd.append(np.zeros((s_n, bitset.n_words(d_n)), dtype=np.uint64))
+            bwd.append(np.zeros((d_n, bitset.n_words(s_n)), dtype=np.uint64))
+            continue
+        mat = oracle.fwd_matrix(e.kind)
+        if (expand_method == "interval" and intervals is not None
+                and e.kind == DESC):
+            # §5.5 early expansion termination on compact ids: a src
+            # candidate v can only reach dst candidates with
+            # begin <= end[v], so rows whose plausible prefix is empty are
+            # skipped outright — never gathered or unpacked.  The oracle
+            # rows are exact, so no further interval masking is needed
+            # (and the surviving rows stay packed and chunk-bounded).
+            begins = np.sort(intervals.begin[dst_idx])
+            hi = np.searchsorted(begins, intervals.end[src_idx],
+                                 side="right")
+            f = np.zeros((s_n, bitset.n_words(d_n)), dtype=np.uint64)
+            live = np.nonzero(hi > 0)[0]
+            if len(live):
+                f[live] = bitset.gather_columns(mat, src_idx[live],
+                                                dst_idx, n)
         else:
-            for v in src_idx:
-                f[int(v)] = oracle.fwd_row(int(v), e.kind) & dst_bits
-        # drop empty rows and build the reverse index
-        f = {v: r for v, r in f.items() if bitset.any_set(r)}
-        cols = np.zeros(bitset.n_words(n), dtype=np.uint64)
-        for r in f.values():
-            cols |= r
-        for u in bitset.to_indices(cols, n):
-            b[int(u)] = oracle.bwd_row(int(u), e.kind) & cos[e.src]
+            f = bitset.gather_columns(mat, src_idx, dst_idx, n)
         fwd.append(f)
-        bwd.append(b)
+        bwd.append(bitset.transpose(f, d_n))
     t2 = time.perf_counter()
 
-    return RIG(query=q, n_graph=n, cos=cos, fwd=fwd, bwd=bwd, sim=sim,
-               build_select_s=t1 - t0, build_expand_s=t2 - t1)
+    return RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd,
+               sim=sim, build_select_s=t1 - t0, build_expand_s=t2 - t1)

@@ -47,6 +47,19 @@ __all__ = ["EngineOptions", "EngineStats", "EngineResult", "Engine"]
 
 QueryLike = Union[str, PatternQuery]
 
+_TPU_AVAILABLE: Optional[bool] = None
+
+
+def _tpu_available() -> bool:
+    global _TPU_AVAILABLE
+    if _TPU_AVAILABLE is None:
+        try:
+            import jax
+            _TPU_AVAILABLE = jax.default_backend() == "tpu"
+        except Exception:
+            _TPU_AVAILABLE = False
+    return _TPU_AVAILABLE
+
 
 @dataclass
 class EngineOptions:
@@ -61,13 +74,21 @@ class EngineOptions:
     plan_cache_size: int = 256
     max_resident_graphs: int = 8
     force_backend: Optional[str] = None   # "host" | "device" | None
+    # route the frontier enumerator's AND+popcount through the Pallas
+    # intersect kernel: None = auto (only on real TPU backends — the
+    # interpreter fallback is orders of magnitude slower than numpy)
+    frontier_device: Optional[bool] = None
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
 
     def caps(self) -> DeviceCaps:
+        fd = self.frontier_device
+        if fd is None:
+            fd = _tpu_available()
         return DeviceCaps(max_q=self.max_q, max_e=self.max_e,
                           capacity=self.capacity,
-                          min_graph_nodes=self.device_min_nodes)
+                          min_graph_nodes=self.device_min_nodes,
+                          frontier_device=fd)
 
 
 @dataclass
@@ -92,6 +113,7 @@ class EngineStats:
     rig_nodes: int = 0
     rig_edges: int = 0
     truncated: bool = False
+    enum_method: str = "backtrack"   # strategy that ran (device: jaxgm's)
 
 
 @dataclass
@@ -138,6 +160,7 @@ class _Resident:
             self.ctx.ensure_labels()
             self._gm = GM(self.ctx.graph)
             self._gm.oracle = self.ctx.oracle     # share the label cache
+            self._gm.intervals = self.ctx.intervals   # §5.5 interval path
         return self._gm
 
     def jgm(self):
@@ -284,6 +307,7 @@ class Engine:
         stats.rig_nodes = m.rig_nodes
         stats.rig_edges = m.rig_edges
         stats.truncated = m.truncated
+        stats.enum_method = m.enum_method
         entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
                           sim_passes=m.sim_passes, matching_s=m.matching_s,
                           enumerate_s=m.enumerate_s, count=m.count)
@@ -297,6 +321,7 @@ class Engine:
         observation, and exact host fallback on capacity overflow.
         Returns ``(count, tuples)``."""
         stats.backend = DEVICE
+        stats.enum_method = "jaxgm-frontier"    # device matcher's enumerator
         # exact_sim runs the device fixpoint loop, whose pass count is not
         # surfaced; 0 = "not tracked" (the truncated mode reports its budget)
         jgm = res.jgm()

@@ -15,10 +15,16 @@ paper ablates (Figs. 8-11); the planner picks them per query from
   large and the match sets so sparse that per-candidate ``bititer`` touches
   fewer words.
 * **ordering** — ``jo`` (the paper's default search ordering).
+* **enum method** — ``backtrack`` (one tuple at a time, constant space) vs
+  ``frontier`` (batched level-synchronous enumeration) vs
+  ``frontier-device`` (frontier with the AND+popcount step on the
+  ``intersect`` Pallas kernel).  Frontier wins when the enumeration visits
+  many partial assignments; tiny answer sets stay on backtracking.
 
 Plans are cached by canonical query key; on repeat executions the observed
-``RigStats`` re-plan the backend (e.g. a query whose RIG collapsed to a few
-nodes is cheaper on the host even on a big graph).
+``RigStats`` re-plan the backend *and* the enum method (e.g. a query whose
+RIG collapsed to a few nodes is cheaper on the host even on a big graph; a
+query observed to enumerate many results moves to the frontier path).
 """
 
 from __future__ import annotations
@@ -45,6 +51,7 @@ class DeviceCaps:
     max_e: int = 16
     capacity: int = 4096
     min_graph_nodes: int = 512    # below this, dispatch overhead dominates
+    frontier_device: bool = False  # route frontier ANDs through the kernel
 
 
 @dataclass
@@ -53,6 +60,7 @@ class Plan:
     sim_algo: str                  # bas | dag | dagmap | none
     check_method: str              # binsearch | bititer | bitbat
     ordering: str = "jo"
+    enum_method: str = "backtrack"  # backtrack | frontier | frontier-device
     sim_passes: Optional[int] = 4
     est_cost: float = 0.0
     est_card: float = 0.0
@@ -66,13 +74,15 @@ class Plan:
         return GMOptions(use_transitive_reduction=False,
                          sim_algo=self.sim_algo, sim_passes=self.sim_passes,
                          check_method=self.check_method,
-                         ordering=self.ordering, limit=limit,
+                         ordering=self.ordering,
+                         enum_method=self.enum_method, limit=limit,
                          materialize=materialize, max_tuples=max_tuples)
 
     def explain(self) -> str:
         why = "; ".join(self.reasons) if self.reasons else "defaults"
         return (f"backend={self.backend} sim={self.sim_algo} "
                 f"check={self.check_method} order={self.ordering} "
+                f"enum={self.enum_method} "
                 f"est_cost={self.est_cost:.3g} est_card={self.est_card:.3g} "
                 f"[{why}]")
 
@@ -84,6 +94,12 @@ TINY_RIG_NODES = 64
 # whole-matrix batched bitset checks.
 SPARSE_GRAPH_NODES = 1 << 16
 SPARSE_MS_FRACTION = 1e-3
+# Estimated-answer-set size above which the batched frontier enumerator
+# beats one-tuple-at-a-time backtracking on the first execution ...
+FRONTIER_EST_RESULTS = 4096
+# ... and observed RIG/result sizes that re-pick it on repeat executions.
+FRONTIER_RIG_NODES = 512
+FRONTIER_MIN_RESULTS = 2048
 
 
 class Planner:
@@ -131,6 +147,19 @@ class Planner:
         reasons.append("bitbat batch checking")
         return "bitbat"
 
+    # --------------------------------------------------------- enum method
+    def _frontier_kind(self) -> str:
+        return "frontier-device" if self.caps.frontier_device else "frontier"
+
+    def _pick_enum(self, q: PatternQuery, reasons: List[str]) -> str:
+        if self.stats.estimate_cardinality(q) >= FRONTIER_EST_RESULTS:
+            reasons.append(
+                f"estimated answer set >= {FRONTIER_EST_RESULTS}: "
+                f"batched frontier enumeration")
+            return self._frontier_kind()
+        reasons.append("small estimated answer set: backtracking enumeration")
+        return "backtrack"
+
     # ----------------------------------------------------------------- API
     def plan(self, q: PatternQuery) -> Plan:
         """Plan an (already transitively-reduced) query."""
@@ -138,7 +167,9 @@ class Planner:
         backend = self._pick_backend(q, reasons)
         sim = self._pick_sim(q, reasons)
         check = self._pick_check(q, reasons)
+        enum = self._pick_enum(q, reasons)
         return Plan(backend=backend, sim_algo=sim, check_method=check,
+                    enum_method=enum,
                     est_cost=self.stats.estimate_cost(q),
                     est_card=self.stats.estimate_cardinality(q),
                     reasons=tuple(reasons))
@@ -150,9 +181,26 @@ class Planner:
             return plan
         if (plan.backend == DEVICE and rig.observations
                 and rig.rig_nodes <= TINY_RIG_NODES):
-            return replace(
+            plan = replace(
                 plan, backend=HOST,
                 reasons=plan.reasons + (
                     f"observed RIG has {rig.rig_nodes} nodes "
                     f"(<= {TINY_RIG_NODES}): host enumeration wins",))
+        if rig.observations and plan.enum_method == "backtrack" and (
+                rig.rig_nodes >= FRONTIER_RIG_NODES
+                or rig.count >= FRONTIER_MIN_RESULTS):
+            plan = replace(
+                plan, enum_method=self._frontier_kind(),
+                reasons=plan.reasons + (
+                    f"observed RIG has {rig.rig_nodes} nodes / "
+                    f"{rig.count} results: frontier enumeration",))
+        elif (rig.observations
+              and plan.enum_method in ("frontier", "frontier-device")
+              and rig.rig_nodes < TINY_RIG_NODES
+              and rig.count < FRONTIER_MIN_RESULTS):
+            plan = replace(
+                plan, enum_method="backtrack",
+                reasons=plan.reasons + (
+                    f"observed tiny RIG ({rig.rig_nodes} nodes, "
+                    f"{rig.count} results): backtracking wins",))
         return plan

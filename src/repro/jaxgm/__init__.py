@@ -3,6 +3,7 @@
 from .device_graph import DeviceGraph, from_host, stacked_matrices
 from .encoding import QueryTensor, encode_batch, encode_query, jo_order
 from .enumerate import MJoinCount, decode_tuples, mjoin_count
+from .frontier import DeviceIntersector
 from .matcher import JaxGM, JaxMatchResult
 from .simulation import double_simulation, fb_sizes, rig_edge_counts
 
@@ -10,6 +11,6 @@ __all__ = [
     "DeviceGraph", "from_host", "stacked_matrices",
     "QueryTensor", "encode_query", "encode_batch", "jo_order",
     "double_simulation", "fb_sizes", "rig_edge_counts",
-    "mjoin_count", "MJoinCount", "decode_tuples",
+    "mjoin_count", "MJoinCount", "decode_tuples", "DeviceIntersector",
     "JaxGM", "JaxMatchResult",
 ]

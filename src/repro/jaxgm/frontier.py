@@ -1,0 +1,70 @@
+"""Device executor for the host-driven frontier MJoin.
+
+``repro.core.mjoin`` enumerates with host-side gathers; the per-level
+AND-reduce + popcount over the gathered ``(F, K, W)`` frontier block is the
+arithmetic hot spot, and this module routes it through the ``intersect``
+Pallas kernel (``repro.kernels.intersect``).  The host path packs into
+uint64 words while the TPU kernel operates on uint32 lanes — the two
+layouts are bit-compatible little-endian, so the conversion is a view.
+
+Inputs are padded to kernel block multiples: F to the next power of two
+(>= 128, so interpret-mode retraces stay bounded to O(log F) distinct
+shapes), W to a multiple of 128 lanes.  Off TPU the kernel runs in
+interpreter mode — correct but slow, used by the equivalence tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.intersect import intersect_pallas
+
+__all__ = ["DeviceIntersector"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pow2_at_least(x: int, floor: int = 128) -> int:
+    p = floor
+    while p < x:
+        p *= 2
+    return p
+
+
+class DeviceIntersector:
+    """AND-reduce + popcount one ``(F, K, W)`` uint64 frontier block.
+
+    Callable: ``rows (F, K, W64) uint64 -> (and_rows (F, W64) uint64,
+    counts (F,) int64)``.  ``interpret=None`` auto-detects: compiled on
+    TPU backends, interpreter elsewhere.
+    """
+
+    def __init__(self, interpret: Optional[bool] = None):
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        self.calls = 0
+
+    def __call__(self, rows_u64: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        f, k, w64 = rows_u64.shape
+        w = 2 * w64                                     # uint32 words
+        rows = np.ascontiguousarray(rows_u64).view(np.uint32)
+        rows = rows.reshape(f, k, w)
+        fp, wp = _pow2_at_least(f), _round_up(max(w, 128), 128)
+        if fp != f or wp != w:
+            padded = np.zeros((fp, k, wp), dtype=np.uint32)
+            padded[:f, :, :w] = rows
+            rows = padded
+        bw = max(d for d in (512, 256, 128) if wp % d == 0)
+        and32, counts = intersect_pallas(jnp.asarray(rows), bf=128, bw=bw,
+                                         interpret=self.interpret)
+        self.calls += 1
+        and_rows = np.ascontiguousarray(
+            np.asarray(and32)[:f, :w]).view(np.uint64)
+        return and_rows, np.asarray(counts)[:f].astype(np.int64)

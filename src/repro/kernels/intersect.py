@@ -46,12 +46,20 @@ def _intersect_kernel(rows_ref, and_ref, cnt_ref, acc_ref, *, k_rows: int):
 @functools.partial(jax.jit, static_argnames=("bf", "bw", "interpret"))
 def intersect_pallas(rows: jax.Array, *, bf: int = 128, bw: int = 512,
                      interpret: bool = False):
-    """rows: uint32 (F, K, W) -> (and_rows uint32 (F, W), counts int32 (F,))."""
+    """rows: uint32 (F, K, W) -> (and_rows uint32 (F, W), counts int32 (F,)).
+
+    Shapes need not be block multiples: inputs are zero-padded up to the
+    grid (zero rows AND to zero and popcount to zero, so padding never
+    perturbs real counts) and outputs sliced back.
+    """
     f, k_rows, w = rows.shape
     bf = min(bf, f)
     bw = min(bw, w)
-    assert f % bf == 0 and w % bw == 0, (f, bf, w, bw)
-    grid = (f // bf, w // bw)
+    fp = -(-f // bf) * bf
+    wp = -(-w // bw) * bw
+    if (fp, wp) != (f, w):
+        rows = jnp.pad(rows, ((0, fp - f), (0, 0), (0, wp - w)))
+    grid = (fp // bf, wp // bw)
     and_rows, counts = pl.pallas_call(
         functools.partial(_intersect_kernel, k_rows=k_rows),
         grid=grid,
@@ -61,12 +69,12 @@ def intersect_pallas(rows: jax.Array, *, bf: int = 128, bw: int = 512,
             pl.BlockSpec((bf, 1), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((f, w), jnp.uint32),
-            jax.ShapeDtypeStruct((f, 1), jnp.int32),
+            jax.ShapeDtypeStruct((fp, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((fp, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((bf, 1), jnp.int32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rows)
-    return and_rows, counts[:, 0]
+    return and_rows[:f, :w], counts[:f, 0]

@@ -1,0 +1,193 @@
+"""Enumeration-strategy equivalence: backtrack == frontier == brute force.
+
+The frontier enumerator must be a drop-in replacement for the paper's
+backtracking MJoin — same result sets, same counts, and (because both
+enumerate in the same lexicographic order over the compact candidate ids)
+exactly the same truncation behaviour under ``limit`` / ``max_tuples``.
+The device variant routes the AND+popcount step through the ``intersect``
+Pallas kernel (interpreter mode off-TPU) and must agree bit-for-bit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import match
+from repro.core.bruteforce import answer_set, brute_force_answers
+from repro.core.graph import paper_example_graph
+from repro.core.mjoin import mjoin
+from repro.core.ordering import get_order
+from repro.core.query import CHILD, paper_example_query, query
+from repro.core.rig import build_rig
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+from repro.testing import given, settings, st
+
+HOST_METHODS = ("backtrack", "frontier")
+
+
+def _assert_equivalent(graph, q, methods=HOST_METHODS, **opts):
+    want = answer_set(brute_force_answers(graph, q))
+    for m in methods:
+        got = match(graph, q, limit=None, enum_method=m, **opts)
+        assert got.count == len(want), (m, got.count, len(want))
+        assert answer_set(got.tuples) == want, m
+    return len(want)
+
+
+@pytest.mark.parametrize("qtype", ["C", "H", "D"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_frontier_matches_backtrack_and_bruteforce(qtype, seed):
+    graph = random_labeled_graph(55, avg_degree=2.4, n_labels=4, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype=qtype,
+                                seed=seed + 20)
+    _assert_equivalent(graph, q)
+
+
+def test_paper_example_all_methods():
+    g = paper_example_graph()
+    n = _assert_equivalent(g, paper_example_query())
+    assert n > 0
+
+
+@pytest.mark.parametrize("variant", [
+    dict(expand_method="interval"),              # §5.5 early termination
+    dict(ordering="ri"),
+    dict(sim_algo="none", use_prefilter=True),   # GM-F
+])
+def test_frontier_under_build_variants(variant):
+    graph = random_labeled_graph(50, avg_degree=2.5, n_labels=4, seed=42)
+    q = random_query_from_graph(graph, n_nodes=5, qtype="H", seed=43)
+    _assert_equivalent(graph, q, **variant)
+
+
+def test_truncation_semantics_identical():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    assert full.count > 10
+    for lim in (1, 5, full.count, full.count + 1):
+        bt = match(graph, q, limit=lim, enum_method="backtrack")
+        fr = match(graph, q, limit=lim, enum_method="frontier")
+        assert bt.count == fr.count
+        assert bt.truncated == fr.truncated
+        # same lexicographic enumeration order -> identical prefixes
+        assert np.array_equal(bt.tuples, fr.tuples)
+
+
+def test_max_tuples_caps_materialization_not_count():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    assert full.count > 7
+    for m in HOST_METHODS:
+        got = match(graph, q, limit=None, enum_method=m, max_tuples=7)
+        assert got.count == full.count          # counting continues
+        assert got.tuples.shape == (7, q.n)
+        assert np.array_equal(got.tuples, full.tuples[:7])
+
+
+def test_empty_rig_all_methods():
+    graph = random_labeled_graph(50, avg_degree=2.0, n_labels=3, seed=5)
+    q = query(labels=[0, 99], edges=[(0, 1, CHILD)])
+    for m in HOST_METHODS:
+        got = match(graph, q, limit=None, enum_method=m)
+        assert got.count == 0
+        assert got.tuples.shape == (0, 2)
+
+
+def test_single_node_query():
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=3, seed=6)
+    q = query(labels=[1], edges=[])
+    want = answer_set(brute_force_answers(graph, q))
+    for m in HOST_METHODS:
+        got = match(graph, q, limit=None, enum_method=m)
+        assert got.count == len(want)
+        assert answer_set(got.tuples) == want
+        part = match(graph, q, limit=2, enum_method=m)
+        assert part.count == min(2, len(want))
+
+
+def test_counting_mode_no_materialization():
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=7)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=8)
+    ref = match(graph, q, limit=None)
+    for m in HOST_METHODS:
+        got = match(graph, q, limit=None, enum_method=m, materialize=False)
+        assert got.tuples is None and got.count == ref.count
+
+
+def test_frontier_overflow_falls_back_to_backtrack():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig = build_rig(graph, q.transitive_reduction())
+    order = get_order(rig, "jo")
+    ref = mjoin(rig, order, limit=None)
+    tiny = mjoin(rig, order, limit=None, method="frontier", max_frontier=2)
+    assert tiny.stats.method == "backtrack"      # fell back
+    assert tiny.count == ref.count
+    assert np.array_equal(tiny.tuples, ref.tuples)
+
+
+def test_mjoin_rejects_unknown_method():
+    graph = random_labeled_graph(20, avg_degree=2.0, n_labels=2, seed=0)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="C", seed=1)
+    rig = build_rig(graph, q.transitive_reduction())
+    with pytest.raises(ValueError):
+        mjoin(rig, get_order(rig, "jo"), method="nope")
+
+
+def test_enum_method_surfaced_in_match_result():
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=3, seed=9)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="C", seed=9)
+    for m in HOST_METHODS:
+        assert match(graph, q, enum_method=m).enum_method == m
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["C", "H", "D"]),
+       st.integers(3, 5))
+@settings(max_examples=20, deadline=None)
+def test_frontier_equivalence_random(seed, qtype, qsize):
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=5,
+                                 kind="uniform", seed=seed % 89)
+    q = random_query_from_graph(graph, n_nodes=qsize, qtype=qtype, seed=seed)
+    want = answer_set(brute_force_answers(graph, q))
+    bt = match(graph, q, limit=None, enum_method="backtrack")
+    fr = match(graph, q, limit=None, enum_method="frontier")
+    assert answer_set(bt.tuples) == want
+    assert bt.count == fr.count == len(want)
+    assert np.array_equal(bt.tuples, fr.tuples)   # identical order, too
+
+
+# ------------------------------------------------------------- device path
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:                                   # bare interpreter
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+@needs_jax
+@pytest.mark.parametrize("seed", [0, 1])
+def test_frontier_device_interpret_equivalence(seed):
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=seed + 5)
+    want = answer_set(brute_force_answers(graph, q))
+    got = match(graph, q, limit=None, enum_method="frontier-device")
+    assert got.count == len(want)
+    assert answer_set(got.tuples) == want
+    bt = match(graph, q, limit=None, enum_method="backtrack")
+    assert np.array_equal(got.tuples, bt.tuples)
+
+
+@needs_jax
+def test_frontier_device_truncation():
+    graph = random_labeled_graph(60, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    if full.count > 5:
+        dv = match(graph, q, limit=5, enum_method="frontier-device")
+        bt = match(graph, q, limit=5, enum_method="backtrack")
+        assert dv.count == 5 and dv.truncated
+        assert np.array_equal(dv.tuples, bt.tuples)

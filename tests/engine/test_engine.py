@@ -208,3 +208,27 @@ def test_resident_eviction_purges_plan_cache():
     eng.execute("(a:L0)-/->(b:L1)", graph=g2)  # evicts g1's residency
     assert eng.cache_info()["resident_graphs"] == 1
     assert eng.cache_info()["plan_entries"] == 1   # g1's entry purged
+
+
+def test_engine_surfaces_enum_method():
+    g = random_labeled_graph(400, avg_degree=3.0, n_labels=4, seed=7)
+    eng = _host_engine(g)
+    res = eng.execute("(a:L0)-/->(b:L1)-//->(c:L2)")
+    assert res.stats.enum_method == res.plan.enum_method
+    assert res.stats.enum_method in ("backtrack", "frontier",
+                                     "frontier-device")
+
+
+def test_engine_refines_enum_method_from_observed_rig():
+    from repro.engine.planner import (FRONTIER_MIN_RESULTS,
+                                      FRONTIER_RIG_NODES)
+    g = random_labeled_graph(1200, avg_degree=3.0, n_labels=2, seed=11)
+    eng = _host_engine(g)
+    text = "(a:L0)-//->(b:L1)-//->(c:L0)"
+    first = eng.execute(text)
+    second = eng.execute(text)                  # plan-cache hit -> refine
+    assert second.stats.plan_cache_hit
+    assert second.count == first.count
+    if (first.stats.rig_nodes >= FRONTIER_RIG_NODES
+            or first.count >= FRONTIER_MIN_RESULTS):
+        assert second.stats.enum_method in ("frontier", "frontier-device")

@@ -136,3 +136,65 @@ def test_plan_gm_options_realize_choices():
     assert opts.check_method == p.check_method
     assert opts.materialize
     assert not opts.use_transitive_reduction   # engine reduces before GM
+
+
+# ------------------------------------------------------------- enum method
+def test_enum_method_small_card_backtracks():
+    p = Planner(_stats(1000)).plan(parse("(a:L0)-/->(b:L1)"))
+    assert p.enum_method == "backtrack"
+
+
+def test_enum_method_large_card_goes_frontier():
+    s = _stats(1000)
+    s.label_counts = {l: 400 for l in s.label_counts}   # dense match sets
+    p = Planner(s).plan(query([0, 1, 2], [(0, 1, DESC), (1, 2, DESC)]))
+    assert p.est_card >= 4096
+    assert p.enum_method == "frontier"
+    assert any("frontier" in r for r in p.reasons)
+
+
+def test_refine_large_rig_picks_frontier():
+    planner = Planner(_stats(2000))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    plan = planner.plan(q)
+    assert plan.enum_method == "backtrack"
+    rig = RigStats()
+    rig.observe(rig_nodes=900, rig_edges=4000, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=100)
+    refined = planner.refine(plan, q, rig)
+    assert refined.enum_method == "frontier"
+    # realized in GMOptions
+    assert refined.gm_options().enum_method == "frontier"
+
+
+def test_refine_many_results_picks_frontier():
+    planner = Planner(_stats(2000))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    rig = RigStats()
+    rig.observe(rig_nodes=50, rig_edges=200, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=1_000_000)
+    assert planner.refine(planner.plan(q), q, rig).enum_method == "frontier"
+
+
+def test_refine_tiny_rig_reverts_to_backtrack():
+    s = _stats(1000)
+    s.label_counts = {l: 400 for l in s.label_counts}
+    planner = Planner(s)
+    q = query([0, 1, 2], [(0, 1, DESC), (1, 2, DESC)])
+    plan = planner.plan(q)
+    assert plan.enum_method == "frontier"
+    rig = RigStats()
+    rig.observe(rig_nodes=8, rig_edges=10, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=3)
+    assert planner.refine(plan, q, rig).enum_method == "backtrack"
+
+
+def test_frontier_device_caps_flag():
+    s = _stats(2000)
+    planner = Planner(s, caps=DeviceCaps(frontier_device=True))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    rig = RigStats()
+    rig.observe(rig_nodes=900, rig_edges=4000, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=100)
+    assert planner.refine(planner.plan(q), q, rig).enum_method == \
+        "frontier-device"
