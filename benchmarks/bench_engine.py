@@ -11,10 +11,17 @@ core directly:
   planner choosing per query, (b) forced onto the host matcher.  (A forced
   device run is informative on real accelerators; under quick/CPU mode the
   jit cost swamps it, so it is gated behind --full.)
+* **streaming** — time-to-first-chunk of ``execute_stream`` vs the full
+  one-shot materialization on a warm engine (the streaming API's latency
+  win), plus the full-drain cost (its overhead bound).
+* **batched execute_many vs sequential loop** — a serving-style warm
+  workload (a few hot query shapes, many requests) run as N ``execute``
+  calls vs one ``execute_many``; the batch path groups by canonical form
+  and answers repeats from one execution.
 
 Standalone run writes the machine-readable baseline ``BENCH_engine.json``:
 
-  PYTHONPATH=src python -m benchmarks.bench_engine [--full] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.bench_engine [--quick|--full] [--out PATH]
 """
 
 from __future__ import annotations
@@ -70,6 +77,70 @@ def run(quick: bool = True) -> List[Row]:
     rows.append(Row("engine_warm_isomorphic", iso_s * 1e6,
                     {"plan_cache_hit": True}))
 
+    # ---- streaming: first-chunk latency vs one-shot materialization -----
+    eng, g = _fresh_engine(n, seed=1, materialize=True)
+    # 4-hop descendant chain: tens of thousands of results in quick mode
+    big = "(a:L0)-//->(b:L0)-//->(c:L0)-//->(d:L0)"
+    eng.execute(big)                          # warm labels + plan + RIG stats
+    full = eng.execute(big)
+    full_s = min(_time_one(eng, big) for _ in range(3))
+    # prefix consumer: reads one chunk and stops — the tail is never
+    # enumerated or materialized (64 resident rows instead of the full set)
+    first_s = float("inf")
+    first_rows = 0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        stream = eng.execute_stream(big, chunk_size=64)
+        first = next(iter(stream), None)
+        first_s = min(first_s, time.perf_counter() - t0)
+        first_rows = 0 if first is None else len(first)
+        stream.close()
+    drain_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        drained = eng.execute_stream(big)
+        total = sum(len(c) for c in drained)
+        drain_s = min(drain_s, time.perf_counter() - t0)
+    rows.append(Row("engine_stream_first_chunk", first_s * 1e6,
+                    {"chunk_rows": first_rows,
+                     "enum_method": stream.stats.enum_method,
+                     "result_set": full.count,
+                     "oneshot_us": round(full_s * 1e6, 1),
+                     "first_chunk_speedup": round(full_s / max(first_s, 1e-9),
+                                                  1)}))
+    rows.append(Row("engine_stream_drain", drain_s * 1e6,
+                    {"tuples": total,
+                     "chunk_size": drained.stats.chunk_size,
+                     "oneshot_us": round(full_s * 1e6, 1)}))
+
+    # ---- micro-batched execute_many vs sequential loop ------------------
+    # serving-style warm workload: a few hot query shapes, many requests
+    distinct = ["(a:L0)-//->(b:L1)", "(a:L1)-//->(b:L2)",
+                "(a:L2)-/->(b:L3)-//->(c:L4)", "(a:L5)-//->(b:L6)"]
+    requests = [distinct[i % len(distinct)] for i in range(16)]
+    eng, _ = _fresh_engine(n, seed=2)
+    for q in distinct:                        # warm labels + plans
+        eng.execute(q)
+    t0 = time.perf_counter()
+    for q in requests:
+        eng.execute(q)
+    loop_s = time.perf_counter() - t0
+    shared_before = eng.counters["shared_exec"]
+    t0 = time.perf_counter()
+    batch = eng.execute_many(requests)
+    many_s = time.perf_counter() - t0
+    assert all(r.count == s.count
+               for r, s in zip(batch, [eng.execute(q) for q in requests]))
+    rows.append(Row("engine_many_vs_loop", many_s / len(requests) * 1e6,
+                    {"requests": len(requests),
+                     "distinct": len(distinct),
+                     "shared_exec": eng.counters["shared_exec"]
+                     - shared_before,
+                     "loop_us_per_query": round(loop_s / len(requests) * 1e6,
+                                                1),
+                     "speedup_vs_loop": round(loop_s / max(many_s, 1e-9),
+                                              1)}))
+
     # ---- planner vs fixed backend throughput ----------------------------
     workload = bench_queries(
         random_labeled_graph(n, avg_degree=3.0, n_labels=8, seed=0),
@@ -100,9 +171,12 @@ def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graphs, CI smoke mode (the default)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
+    assert not (args.quick and args.full), "--quick and --full conflict"
 
     rows = run(quick=not args.full)
     print("name,us_per_call,derived")

@@ -5,8 +5,9 @@
 # and TM baselines the paper compares against.  The TPU-adapted twin lives
 # in ``repro.jaxgm``.
 from .graph import DataGraph, graph_from_edge_list, paper_example_graph
-from .matcher import GM, GMOptions, MatchResult, match
-from .mjoin import ENUM_METHODS, MJoinResult, MJoinStats, mjoin
+from .matcher import GM, GMOptions, MatchResult, MatchStream, match
+from .mjoin import (ENUM_METHODS, MJoinResult, MJoinStats, MJoinStream,
+                    iter_tuples, mjoin, mjoin_batched)
 from .ordering import get_order
 from .query import CHILD, DESC, PatternQuery, QueryEdge, paper_example_query, query
 from .rig import RIG, build_rig, prefilter
@@ -17,6 +18,7 @@ __all__ = [
     "PatternQuery", "QueryEdge", "CHILD", "DESC", "query", "paper_example_query",
     "EdgeOracle", "fb_sim", "fb_sim_bas", "fb_sim_dag", "match_sets",
     "RIG", "build_rig", "prefilter", "get_order", "mjoin",
-    "MJoinResult", "MJoinStats", "ENUM_METHODS",
-    "GM", "GMOptions", "MatchResult", "match",
+    "MJoinResult", "MJoinStats", "MJoinStream", "ENUM_METHODS",
+    "iter_tuples", "mjoin_batched",
+    "GM", "GMOptions", "MatchResult", "MatchStream", "match",
 ]

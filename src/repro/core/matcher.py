@@ -20,7 +20,8 @@ from typing import List, Optional
 import numpy as np
 
 from .graph import DataGraph
-from .mjoin import DEFAULT_LIMIT, MJoinResult, mjoin
+from .mjoin import (DEFAULT_LIMIT, MJoinResult, MJoinStream, iter_tuples,
+                    mjoin, mjoin_batched)
 from .ordering import get_order
 from .query import PatternQuery
 from .rig import RIG, SimAlgo, build_rig
@@ -58,6 +59,49 @@ class MatchResult:
     rig: Optional[RIG] = field(default=None, repr=False)
 
 
+@dataclass
+class MatchStream:
+    """Streaming counterpart of :class:`MatchResult`.
+
+    Iterate for ``(chunk, q.n)`` int64 tuple chunks (global ids, query-node
+    order) in one-shot lexicographic order; the RIG front half has already
+    run (``matching_s``), enumeration advances lazily as chunks are
+    consumed.  ``count`` / ``truncated`` / ``enum_method`` are live views
+    of the underlying :class:`~repro.core.mjoin.MJoinStream` and are final
+    once iteration ends."""
+
+    query: PatternQuery
+    stream: MJoinStream
+    order: List[int]
+    rig_nodes: int
+    rig_edges: int
+    matching_s: float
+    sim_passes: int
+    rig: Optional[RIG] = field(default=None, repr=False)
+
+    def __iter__(self):
+        return iter(self.stream)
+
+    def close(self) -> None:
+        self.stream.close()
+
+    @property
+    def count(self) -> int:
+        return self.stream.count
+
+    @property
+    def truncated(self) -> bool:
+        return self.stream.stats.truncated
+
+    @property
+    def enum_method(self) -> str:
+        return self.stream.stats.method
+
+    @property
+    def enumerate_s(self) -> float:
+        return self.stream.stats.enumerate_s
+
+
 class GM:
     """Reusable matcher bound to one data graph (shares the reachability
     index and packed adjacency across queries — those are *data* indexes;
@@ -72,8 +116,13 @@ class GM:
         # (expand_method="interval"); the engine shares its per-graph labels
         self.intervals = intervals
 
-    def match(self, q: PatternQuery,
-              options: Optional[GMOptions] = None) -> MatchResult:
+    def prepare_rig(self, q: PatternQuery,
+                    options: Optional[GMOptions] = None):
+        """The matching front half shared by every consumption mode:
+        TR + double simulation + RIG expansion + search ordering.
+
+        Returns ``(q, rig, order, matching_s)`` — ``q`` already reduced and
+        ``order`` the enumeration order (identity for an empty RIG)."""
         opt = options or self.options
         if opt.expand_method == "interval" and self.intervals is None:
             from .reachability import IntervalLabels
@@ -87,16 +136,14 @@ class GM:
                         check_method=opt.check_method,
                         expand_method=opt.expand_method,
                         intervals=self.intervals)
-        if rig.is_empty():
-            t1 = time.perf_counter()
-            return MatchResult(
-                count=0,
-                tuples=np.empty((0, q.n), dtype=np.int64) if opt.materialize else None,
-                order=list(range(q.n)), rig_nodes=rig.n_nodes(), rig_edges=0,
-                matching_s=t1 - t0, enumerate_s=0.0, total_s=t1 - t0,
-                sim_passes=rig.sim.passes if rig.sim else 0, truncated=False,
-                enum_method=opt.enum_method, rig=rig)
-        order = get_order(rig, opt.ordering)
+        order = (list(range(q.n)) if rig.is_empty()
+                 else get_order(rig, opt.ordering))
+        return q, rig, order, time.perf_counter() - t0
+
+    def match(self, q: PatternQuery,
+              options: Optional[GMOptions] = None) -> MatchResult:
+        opt = options or self.options
+        q, rig, order, matching_s = self.prepare_rig(q, opt)
         t1 = time.perf_counter()
         res: MJoinResult = mjoin(rig, order, limit=opt.limit,
                                  materialize=opt.materialize,
@@ -105,11 +152,66 @@ class GM:
         t2 = time.perf_counter()
         return MatchResult(
             count=res.count, tuples=res.tuples, order=order,
-            rig_nodes=rig.n_nodes(), rig_edges=rig.n_edges(),
-            matching_s=t1 - t0, enumerate_s=t2 - t1, total_s=t2 - t0,
+            rig_nodes=rig.n_nodes(),
+            rig_edges=0 if rig.is_empty() else rig.n_edges(),
+            matching_s=matching_s, enumerate_s=t2 - t1,
+            total_s=matching_s + (t2 - t1),
             sim_passes=rig.sim.passes if rig.sim else 0,
-            truncated=res.stats.truncated, enum_method=res.stats.method,
+            truncated=res.stats.truncated,
+            enum_method=(opt.enum_method if rig.is_empty()
+                         else res.stats.method),
             rig=rig)
+
+    def match_stream(self, q: PatternQuery,
+                     options: Optional[GMOptions] = None,
+                     chunk_size: int = 1024) -> "MatchStream":
+        """Streaming counterpart of :meth:`match`: the RIG is built eagerly
+        (node selection is existence-checking, not enumeration) but the
+        MJoin enumeration is lazy — iterate the returned
+        :class:`MatchStream` for ``(chunk_size, q.n)`` tuple chunks in the
+        same lexicographic order as one-shot matching."""
+        opt = options or self.options
+        q, rig, order, matching_s = self.prepare_rig(q, opt)
+        stream = iter_tuples(rig, order, chunk_size=chunk_size,
+                             limit=opt.limit, method=opt.enum_method)
+        return MatchStream(query=q, stream=stream, order=order,
+                           rig_nodes=rig.n_nodes(),
+                           rig_edges=0 if rig.is_empty() else rig.n_edges(),
+                           matching_s=matching_s,
+                           sim_passes=rig.sim.passes if rig.sim else 0,
+                           rig=rig)
+
+    def match_batch_frontier(self, queries: List[PatternQuery],
+                             options: Optional[List[GMOptions]] = None,
+                             *, intersector=None):
+        """Counting-mode batch with cross-query micro-batched frontier
+        dispatches: every query's RIG is built on the host, then all
+        enumerations run under one scheduler that fuses their per-level
+        ``(F, K, W)`` constraint gathers into a single ``(ΣF, K, W)`` slab
+        per round (one ``intersect`` dispatch shared by the whole batch —
+        see :func:`repro.core.mjoin.mjoin_batched`).
+
+        Returns ``(results, dispatches)``; per-query counts equal
+        ``match(q, materialize=False)``."""
+        opts = options or [self.options] * len(queries)
+        jobs, metas = [], []
+        for q, opt in zip(queries, opts):
+            q, rig, order, matching_s = self.prepare_rig(q, opt)
+            jobs.append((rig, order, opt.limit))
+            metas.append((q, rig, order, matching_s))
+        mj, dispatches = mjoin_batched(jobs, intersector=intersector)
+        out = []
+        for (q, rig, order, matching_s), res in zip(metas, mj):
+            out.append(MatchResult(
+                count=res.count, tuples=None, order=order,
+                rig_nodes=rig.n_nodes(),
+                rig_edges=0 if rig.is_empty() else rig.n_edges(),
+                matching_s=matching_s, enumerate_s=res.stats.enumerate_s,
+                total_s=matching_s + res.stats.enumerate_s,
+                sim_passes=rig.sim.passes if rig.sim else 0,
+                truncated=res.stats.truncated,
+                enum_method=res.stats.method, rig=rig))
+        return out, dispatches
 
 
 def match(graph: DataGraph, q: PatternQuery, **kwargs) -> MatchResult:

@@ -19,6 +19,24 @@ Two enumeration strategies over the compact candidate-local RIG layout:
   Frontier slabs bound the transient gather memory; both strategies
   enumerate in the same lexicographic order, so ``limit`` / ``max_tuples``
   / truncation semantics are preserved exactly.
+
+Both strategies are implemented as *block generators* over the shared
+constraint machinery, which gives three consumption modes on one code
+path:
+
+* :func:`mjoin` — the classic one-shot API (count + optional tuples);
+* :func:`iter_tuples` — a chunked streaming API (:class:`MJoinStream`)
+  that yields fixed-size ndarray chunks lazily, in the same lexicographic
+  order as one-shot enumeration, with ``limit`` pushdown: a consumer that
+  stops early (or hits the limit mid-chunk) never visits the tail — the
+  backtrack search simply pauses, and the frontier path reads no further
+  last-level slabs (observable via ``MJoinStats.intersections`` /
+  ``device_calls``);
+* :func:`mjoin_batched` — cross-query counting: several queries'
+  frontier enumerations run as coroutines under one scheduler that pads
+  and stacks their pending ``(F, K, W)`` constraint gathers into a single
+  ``(ΣF, K, W)`` slab per round — one device dispatch shared by the whole
+  batch instead of per-query dispatches.
 """
 
 from __future__ import annotations
@@ -26,7 +44,7 @@ from __future__ import annotations
 import time
 import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,7 +55,7 @@ DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
 ENUM_METHODS = ("backtrack", "frontier", "frontier-device")
 
 _FRONTIER_SLAB = 8192        # frontier rows per gather slab (memory bound)
-_MAT_INIT = 1024             # initial materialization buffer rows
+_INF_CAP = 1 << 62           # "materialize everything" sentinel
 
 
 @dataclass
@@ -98,7 +116,7 @@ _DEVICE = None
 _DEVICE_FAILED = False
 
 
-def _device_intersector():
+def device_intersector():
     """The jax/Pallas frontier executor, or None if jax is unavailable."""
     global _DEVICE, _DEVICE_FAILED
     if _DEVICE is None and not _DEVICE_FAILED:
@@ -115,9 +133,19 @@ def _device_intersector():
 
 
 # ---------------------------------------------------------------- backtrack
-def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
-                     materialize: bool, max_tuples: int,
-                     stats: MJoinStats) -> Tuple[int, Optional[np.ndarray]]:
+def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
+                      stats: MJoinStats, mat_cap: int,
+                      block: int = 1024) -> Iterator[Tuple[Optional[np.ndarray], int]]:
+    """Depth-first enumeration as a lazy block generator.
+
+    Yields ``(rows, visited)`` pairs: ``rows`` is an ``(k <= block, n)``
+    int64 array of completed assignments (local ids, order-position layout;
+    ``None`` once ``mat_cap`` assignments have been materialized) and
+    ``visited`` the number of results visited since the previous yield
+    (materialization may lag counting when ``mat_cap`` < limit).  The
+    search state is suspended between yields, so a consumer that stops
+    early never visits the tail.
+    """
     n = rig.query.n
     sizes = [rig.cos_size(qi) for qi in order]
     all_ids = [np.arange(s, dtype=np.int64) for s in sizes]
@@ -128,9 +156,10 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
     cursors = np.zeros(n, dtype=np.int64)
     count = 0
 
-    # pre-sized growable materialization buffer (local ids, order layout)
-    buf = np.empty((min(_MAT_INIT, max_tuples), n), dtype=np.int64)
-    n_mat = 0
+    buf = (np.empty((block, n), dtype=np.int64) if mat_cap > 0 else None)
+    k = 0          # rows in buf
+    visited = 0    # results since last yield
+    n_mat = 0      # total rows materialized
 
     def candidates(i: int) -> np.ndarray:
         cs = cons[i]
@@ -168,19 +197,40 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
         stats.expanded += 1
         if i == n - 1:
             count += 1
-            if materialize and n_mat < max_tuples:
-                if n_mat == len(buf):                  # amortized growth
-                    buf = np.vstack([buf, np.empty_like(buf)])
-                buf[n_mat] = t
+            visited += 1
+            if buf is not None and n_mat < mat_cap:
+                buf[k] = t
+                k += 1
                 n_mat += 1
+            if visited >= block:
+                yield (buf[:k].copy() if k else None), visited
+                k = 0
+                visited = 0
             cursors[i] += 1
             continue
         i += 1
         cand_lists[i] = candidates(i)
         cursors[i] = 0
+    if visited:
+        yield (buf[:k].copy() if k else None), visited
 
-    tuples = _to_query_order(buf[:n_mat], order, rig.cand) \
-        if materialize else None
+
+def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
+                     materialize: bool, max_tuples: int,
+                     stats: MJoinStats) -> Tuple[int, Optional[np.ndarray]]:
+    mat_cap = max_tuples if materialize else 0
+    blocks: List[np.ndarray] = []
+    count = 0
+    for blk, visited in _backtrack_blocks(rig, order, cons, limit, stats,
+                                          mat_cap):
+        if blk is not None:
+            blocks.append(blk)
+        count += visited
+    tuples = None
+    if materialize:
+        assign = (np.vstack(blocks) if blocks
+                  else np.empty((0, rig.query.n), dtype=np.int64))
+        tuples = _to_query_order(assign, order, rig.cand)
     return count, tuples
 
 
@@ -209,110 +259,153 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
     return acc, None
 
 
-def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
-                    materialize: bool, max_tuples: int, stats: MJoinStats,
-                    device: bool, max_frontier: int
-                    ) -> Tuple[int, Optional[np.ndarray]]:
+def _frontier_events(rig: RIG, order: List[int], cons, limit,
+                     stats: MJoinStats, device: bool, max_frontier: int,
+                     mat_cap: int, external: bool = False,
+                     slab_rows: Optional[int] = None):
+    """Level-synchronous frontier enumeration as an event generator.
+
+    Yields two event kinds:
+
+    * ``("need", rows)`` — only when ``external``: a pending ``(F, K, W)``
+      constraint gather; the driver must resume the generator with
+      ``send((acc, counts))`` (the AND-reduced rows and their per-row
+      popcounts).  This is the hook the cross-query batcher uses to fuse
+      several queries' gathers into one device dispatch.
+    * ``("out", rows, visited)`` — a block of completed assignments at the
+      last level: ``rows`` is ``(k, n)`` int64 in order-position layout
+      (``None`` when the materialization budget ``mat_cap`` is exhausted
+      or zero), ``visited`` the number of results this slab contributed
+      after limit clipping.  Last-level slabs are processed lazily, one
+      per event, so a consumer that stops early reads no further slabs.
+
+    Raises :class:`FrontierOverflow` — always before the first ``"out"``
+    event, since overflow can only occur while building a non-last level —
+    when a level exceeds ``max_frontier`` rows.
+    """
     n = rig.query.n
     sizes = [rig.cos_size(qi) for qi in order]
-    intersector = _device_intersector() if device else None
-    if device and intersector is None:
-        stats.method = "frontier"                    # jax missing: host path
+    intersector = None
+    if device and not external:
+        intersector = device_intersector()
+        if intersector is None:
+            stats.method = "frontier"                # jax missing: host path
 
-    # number of results to visit / to materialize
-    mat_cap = max_tuples if limit is None else min(max_tuples, limit)
-    mat_blocks: List[np.ndarray] = []
     n_mat = 0
     count = 0
-
     frontier = np.arange(sizes[0], dtype=np.int64)[:, None]   # (F, 1)
     stats.frontier_peak = len(frontier)
     stats.expanded += len(frontier)
 
     if n == 1:
-        count = sizes[0]
-        if limit is not None and count >= limit:
-            count = limit
+        total = sizes[0]
+        if limit is not None and total >= limit:
+            total = limit
             stats.truncated = True
-        if materialize:
-            mat_blocks.append(frontier[:min(count, mat_cap)])
-            n_mat = len(mat_blocks[0])
-    else:
-        for i in range(1, n):
-            last = i == n - 1
-            n_i = sizes[i]
-            cs = cons[i]
-            new_parts: List[np.ndarray] = []
-            new_rows = 0
-            done = False
-            # slab rows bounded by both the row count and the dense unpack
-            # width, so the per-slab transient stays ~32 MB even for huge
-            # candidate sets
-            slab_rows = max(1, min(_FRONTIER_SLAB,
-                                   (1 << 25) // max(n_i, 1)))
-            for lo in range(0, len(frontier), slab_rows):
-                slab = frontier[lo:lo + slab_rows]
-                counts = None
-                if cs:
+        blk = frontier[:min(total, mat_cap)] if mat_cap > 0 else None
+        yield ("out", blk, total)
+        return
+
+    for i in range(1, n):
+        last = i == n - 1
+        n_i = sizes[i]
+        cs = cons[i]
+        new_parts: List[np.ndarray] = []
+        new_rows = 0
+        # slab rows bounded by both the row count and the dense unpack
+        # width, so the per-slab transient stays ~32 MB even for huge
+        # candidate sets
+        srows = slab_rows or max(1, min(_FRONTIER_SLAB,
+                                        (1 << 25) // max(n_i, 1)))
+        for lo in range(0, len(frontier), srows):
+            slab = frontier[lo:lo + srows]
+            counts = None
+            if cs:
+                if external:
+                    rows = np.stack(
+                        [(rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
+                         for (j, ei, isf) in cs], axis=1)     # (f, K, W)
+                    stats.intersections += len(cs) * len(slab)
+                    acc, counts = yield ("need", rows)
+                    stats.device_calls += 1
+                else:
                     acc, counts = _slab_intersect(rig, cs, slab,
                                                   intersector, stats)
-                    bits = None
-                else:                      # disconnected pattern: cartesian
-                    acc = None
-                    bits = np.ones((len(slab), n_i), dtype=bool)
-                if last:
-                    if counts is None:
-                        counts = (bitset.count_rows(acc) if acc is not None
-                                  else np.full(len(slab), n_i,
-                                               dtype=np.int64))
-                    slab_total = int(counts.sum())
-                    want = min(mat_cap - n_mat, slab_total) \
-                        if materialize else 0
-                    if want > 0:
-                        if bits is None:
-                            bits = bitset.unpack(acc, n_i)
-                        rid, cid = np.nonzero(bits)
-                        block = np.concatenate(
-                            [slab[rid[:want]],
-                             cid[:want, None].astype(np.int64)], axis=1)
-                        mat_blocks.append(block)
-                        n_mat += len(block)
-                    count += slab_total
-                    stats.expanded += slab_total
-                    if limit is not None and count >= limit:
-                        stats.expanded -= count - limit
-                        count = limit
-                        stats.truncated = True
-                        done = True
-                        break
-                else:
+                bits = None
+            else:                      # disconnected pattern: cartesian
+                acc = None
+                bits = np.ones((len(slab), n_i), dtype=bool)
+            if last:
+                if counts is None:
+                    counts = (bitset.count_rows(acc) if acc is not None
+                              else np.full(len(slab), n_i, dtype=np.int64))
+                slab_total = int(counts.sum())
+                want = min(mat_cap - n_mat, slab_total) if mat_cap > 0 else 0
+                blk = None
+                if want > 0:
                     if bits is None:
                         bits = bitset.unpack(acc, n_i)
                     rid, cid = np.nonzero(bits)
-                    if len(rid):
-                        new_parts.append(np.concatenate(
-                            [slab[rid], cid[:, None].astype(np.int64)],
-                            axis=1))
-                        new_rows += len(rid)
-                        # enforce the bound *while* accumulating — before
-                        # the oversized level is ever materialized whole
-                        if new_rows > max_frontier:
-                            raise FrontierOverflow(
-                                f"frontier level {i} exceeds "
-                                f"max_frontier={max_frontier} rows")
-            if done or last:
-                break
-            frontier = (np.vstack(new_parts) if new_parts
-                        else np.empty((0, i + 1), dtype=np.int64))
-            stats.frontier_peak = max(stats.frontier_peak, len(frontier))
-            stats.expanded += len(frontier)
-            if len(frontier) == 0:
-                break
+                    blk = np.concatenate(
+                        [slab[rid[:want]],
+                         cid[:want, None].astype(np.int64)], axis=1)
+                    n_mat += len(blk)
+                count += slab_total
+                stats.expanded += slab_total
+                visited = slab_total
+                hit_limit = False
+                if limit is not None and count >= limit:
+                    stats.expanded -= count - limit
+                    visited = slab_total - (count - limit)
+                    count = limit
+                    stats.truncated = True
+                    hit_limit = True
+                yield ("out", blk, visited)
+                if hit_limit:
+                    return
+            else:
+                if bits is None:
+                    bits = bitset.unpack(acc, n_i)
+                rid, cid = np.nonzero(bits)
+                if len(rid):
+                    new_parts.append(np.concatenate(
+                        [slab[rid], cid[:, None].astype(np.int64)],
+                        axis=1))
+                    new_rows += len(rid)
+                    # enforce the bound *while* accumulating — before
+                    # the oversized level is ever materialized whole
+                    if new_rows > max_frontier:
+                        raise FrontierOverflow(
+                            f"frontier level {i} exceeds "
+                            f"max_frontier={max_frontier} rows")
+        if last:
+            return
+        frontier = (np.vstack(new_parts) if new_parts
+                    else np.empty((0, i + 1), dtype=np.int64))
+        stats.frontier_peak = max(stats.frontier_peak, len(frontier))
+        stats.expanded += len(frontier)
+        if len(frontier) == 0:
+            return
 
+
+def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
+                    materialize: bool, max_tuples: int, stats: MJoinStats,
+                    device: bool, max_frontier: int
+                    ) -> Tuple[int, Optional[np.ndarray]]:
+    mat_cap = 0
+    if materialize:
+        mat_cap = max_tuples if limit is None else min(max_tuples, limit)
+    blocks: List[np.ndarray] = []
+    count = 0
+    for _, blk, visited in _frontier_events(rig, order, cons, limit, stats,
+                                            device, max_frontier, mat_cap):
+        if blk is not None and len(blk):
+            blocks.append(blk)
+        count += visited
     tuples = None
     if materialize:
-        assign = (np.vstack(mat_blocks) if mat_blocks
-                  else np.empty((0, n), dtype=np.int64))
+        assign = (np.vstack(blocks) if blocks
+                  else np.empty((0, rig.query.n), dtype=np.int64))
         tuples = _to_query_order(assign, order, rig.cand)
     return count, tuples
 
@@ -366,3 +459,276 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
     stats.results = count
     stats.enumerate_s = time.perf_counter() - t0
     return MJoinResult(count=count, tuples=tuples, stats=stats, order=order)
+
+
+# ----------------------------------------------------------------- streaming
+class MJoinStream:
+    """Chunked lazy enumeration over one RIG (created by :func:`iter_tuples`).
+
+    Iterating yields ``(chunk_size, n_query)`` int64 arrays — global node
+    ids in query-node order, byte-identical to the corresponding slice of
+    one-shot ``mjoin(...).tuples`` — in the same lexicographic order; every
+    chunk except the last has exactly ``chunk_size`` rows.  Enumeration
+    state advances only as chunks are consumed (``limit`` pushdown):
+    stopping early leaves the tail unvisited, which is observable in the
+    live ``stats`` counters.  The stream is single-pass; ``count`` tracks
+    tuples yielded so far and ``stats.truncated`` is set the moment the
+    limit is hit (the final chunk is cut at exactly ``limit`` rows).
+    """
+
+    def __init__(self, rig: RIG, order: List[int], *, chunk_size: int = 1024,
+                 limit: Optional[int] = DEFAULT_LIMIT,
+                 method: str = "backtrack", max_frontier: int = 1 << 25,
+                 slab_rows: Optional[int] = None):
+        if method not in ENUM_METHODS:
+            raise ValueError(f"unknown enum method: {method!r} "
+                             f"(expected one of {ENUM_METHODS})")
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        self.rig = rig
+        self.order = order
+        self.chunk_size = chunk_size
+        self.limit = limit
+        self.method = method
+        self.max_frontier = max_frontier
+        self.slab_rows = slab_rows
+        self.stats = MJoinStats(method=method)
+        self.count = 0               # tuples yielded so far
+        self._it = self._chunks()
+
+    # single-pass iterable
+    def __iter__(self) -> "MJoinStream":
+        return self
+
+    def __next__(self) -> np.ndarray:
+        return next(self._it)
+
+    def close(self) -> None:
+        """Stop enumeration early (drops any suspended search state)."""
+        self._it.close()
+
+    # ------------------------------------------------------------ internals
+    def _blocks(self):
+        """Local-layout assignment blocks, with the frontier -> backtrack
+        overflow fallback (safe: overflow precedes the first output)."""
+        stats = self.stats
+        cons = _constraints(self.rig.query, self.order)
+        if self.method != "backtrack":
+            mat_cap = self.limit if self.limit is not None else _INF_CAP
+            gen = _frontier_events(
+                self.rig, self.order, cons, self.limit, stats,
+                device=(self.method == "frontier-device"),
+                max_frontier=self.max_frontier, mat_cap=mat_cap,
+                slab_rows=self.slab_rows)
+            try:
+                first = next(gen)
+            except StopIteration:
+                return
+            except FrontierOverflow:
+                stats.method = "backtrack"
+                stats.expanded = 0
+                stats.intersections = 0
+                stats.frontier_peak = 0
+                stats.device_calls = 0
+            else:
+                yield first[1]
+                for ev in gen:
+                    yield ev[1]
+                return
+        for blk, _ in _backtrack_blocks(self.rig, self.order, cons,
+                                        self.limit, stats, mat_cap=_INF_CAP,
+                                        block=self.chunk_size):
+            yield blk
+
+    def _chunks(self):
+        # t0 = start of the currently-unaccounted work interval; None while
+        # suspended at a yield (that interval is already accounted), so the
+        # finally clause never re-counts it — nor the consumer's own time
+        # between receiving a chunk and closing the stream.
+        stats = self.stats
+        t0: Optional[float] = time.perf_counter()
+        try:
+            if self.rig.is_empty():
+                return
+            if self.limit is not None and self.limit <= 0:
+                stats.truncated = True
+                return
+            pend: List[np.ndarray] = []
+            pend_rows = 0
+            for blk in self._blocks():
+                if blk is None or not len(blk):
+                    continue
+                pend.append(blk)
+                pend_rows += len(blk)
+                while pend_rows >= self.chunk_size:
+                    cat = pend[0] if len(pend) == 1 else np.vstack(pend)
+                    out, rest = (cat[:self.chunk_size],
+                                 cat[self.chunk_size:])
+                    pend = [rest] if len(rest) else []
+                    pend_rows = len(rest)
+                    self.count += len(out)
+                    stats.results = self.count
+                    stats.enumerate_s += time.perf_counter() - t0
+                    t0 = None
+                    yield _to_query_order(out, self.order, self.rig.cand)
+                    t0 = time.perf_counter()
+            if pend_rows:
+                cat = pend[0] if len(pend) == 1 else np.vstack(pend)
+                self.count += len(cat)
+                stats.results = self.count
+                stats.enumerate_s += time.perf_counter() - t0
+                t0 = None
+                yield _to_query_order(cat, self.order, self.rig.cand)
+                t0 = time.perf_counter()
+        finally:
+            stats.results = self.count
+            if t0 is not None:
+                stats.enumerate_s += time.perf_counter() - t0
+
+
+def iter_tuples(rig: RIG, order: List[int], *, chunk_size: int = 1024,
+                limit: Optional[int] = DEFAULT_LIMIT,
+                method: str = "backtrack", max_frontier: int = 1 << 25,
+                slab_rows: Optional[int] = None) -> MJoinStream:
+    """Streaming counterpart of :func:`mjoin`: a lazy, chunked enumerator.
+
+    ``np.vstack(list(iter_tuples(rig, order, chunk_size=k)))`` equals
+    ``mjoin(rig, order, materialize=True).tuples`` for every ``k`` and
+    every ``method``; chunks arrive in lexicographic order and enumeration
+    work is done on demand (see :class:`MJoinStream`).  ``slab_rows``
+    overrides the frontier gather slab height (testing / tuning hook).
+    """
+    return MJoinStream(rig, order, chunk_size=chunk_size, limit=limit,
+                       method=method, max_frontier=max_frontier,
+                       slab_rows=slab_rows)
+
+
+# -------------------------------------------------------- cross-query batch
+def stack_slabs(blocks: Sequence[np.ndarray]
+                ) -> Tuple[np.ndarray, List[Tuple[int, int, int, int]]]:
+    """Pad + stack per-query ``(F_i, K_i, W_i)`` uint64 constraint slabs
+    into one ``(ΣF, maxK, maxW)`` block for a single fused dispatch.
+
+    Padding is AND-exact: extra K rows are all-ones (the AND identity) and
+    real rows are zero-extended beyond their own W words, so the fused
+    AND-reduce + popcount of the big block restricted to each span equals
+    the per-query result.  Returns ``(big, spans)`` with spans of
+    ``(row_offset, F_i, K_i, W_i)``.
+    """
+    f_tot = sum(b.shape[0] for b in blocks)
+    k_max = max(b.shape[1] for b in blocks)
+    w_max = max(b.shape[2] for b in blocks)
+    big = np.full((f_tot, k_max, w_max), np.uint64(0xFFFFFFFFFFFFFFFF),
+                  dtype=np.uint64)
+    spans: List[Tuple[int, int, int, int]] = []
+    off = 0
+    for b in blocks:
+        f, k, w = b.shape
+        big[off:off + f, :k, :w] = b
+        big[off:off + f, :k, w:] = 0
+        spans.append((off, f, k, w))
+        off += f
+    return big, spans
+
+
+def _host_intersect_block(big: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy AND-reduce + per-row popcount of a stacked ``(F, K, W)`` slab
+    (the host stand-in for the ``intersect`` kernel on the batched path)."""
+    acc = np.bitwise_and.reduce(big, axis=1)
+    return acc, bitset.count_rows(acc)
+
+
+class _BatchJob:
+    __slots__ = ("gen", "stats", "count", "reply", "active_s")
+
+    def __init__(self, gen, stats):
+        self.gen = gen
+        self.stats = stats
+        self.count = 0
+        self.reply = None
+        self.active_s = 0.0      # this job's own share of the batch time
+
+
+def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
+                  *, intersector=None, max_frontier: int = 1 << 25
+                  ) -> Tuple[List[MJoinResult], int]:
+    """Count several queries' occurrences with *cross-query micro-batched*
+    frontier dispatches.
+
+    ``jobs`` is a sequence of ``(rig, order, limit)``.  Every job runs the
+    level-synchronous frontier enumeration as a coroutine; each scheduler
+    round collects one pending ``(F, K, W)`` constraint gather per active
+    job, pads and stacks them (:func:`stack_slabs`) into a single
+    ``(ΣF, K, W)`` slab, resolves it with **one** call to ``intersector``
+    (the ``intersect`` Pallas kernel wrapper; numpy AND+popcount when
+    ``None``), and scatters the per-job results back.  Per-job counts,
+    truncation, and stats semantics match ``mjoin(..., materialize=False)``
+    exactly; a job whose frontier overflows ``max_frontier`` falls back to
+    backtracking on its own, without stalling the batch.
+
+    Returns ``(results, dispatches)`` — dispatches is the number of fused
+    slab calls actually issued (the quantity micro-batching minimizes).
+    """
+    method = "frontier-device" if intersector is not None else "frontier"
+    results: List[Optional[MJoinResult]] = [None] * len(jobs)
+    active = {}
+    dispatches = 0
+    for idx, (rig, order, limit) in enumerate(jobs):
+        stats = MJoinStats(method=method)
+        if rig.is_empty() or (limit is not None and limit <= 0):
+            stats.truncated = limit is not None and limit <= 0 \
+                and not rig.is_empty()
+            results[idx] = MJoinResult(0, None, stats, order)
+            continue
+        cons = _constraints(rig.query, order)
+        gen = _frontier_events(rig, order, cons, limit, stats, device=False,
+                               max_frontier=max_frontier, mat_cap=0,
+                               external=True)
+        active[idx] = _BatchJob(gen, stats)
+
+    while active:
+        requests = {}
+        for idx, job in list(active.items()):
+            rig, order, limit = jobs[idx]
+            t0 = time.perf_counter()
+            try:
+                while True:
+                    ev = job.gen.send(job.reply)
+                    job.reply = None
+                    if ev[0] == "need":
+                        requests[idx] = ev[1]
+                        break
+                    job.count += ev[2]
+                job.active_s += time.perf_counter() - t0
+            except StopIteration:
+                job.stats.results = job.count
+                job.stats.enumerate_s = (job.active_s
+                                         + time.perf_counter() - t0)
+                results[idx] = MJoinResult(job.count, None, job.stats, order)
+                del active[idx]
+            except FrontierOverflow:
+                stats = MJoinStats(method="backtrack")
+                cons = _constraints(rig.query, order)
+                count, _ = _mjoin_backtrack(rig, order, cons, limit,
+                                            materialize=False, max_tuples=0,
+                                            stats=stats)
+                stats.results = count
+                stats.enumerate_s = (job.active_s
+                                     + time.perf_counter() - t0)
+                results[idx] = MJoinResult(count, None, stats, order)
+                del active[idx]
+        if requests:
+            idxs = list(requests)
+            big, spans = stack_slabs([requests[i] for i in idxs])
+            t0 = time.perf_counter()
+            if intersector is not None:
+                acc, counts = intersector(big)
+            else:
+                acc, counts = _host_intersect_block(big)
+            share = (time.perf_counter() - t0) / len(idxs)
+            dispatches += 1
+            for i, (off, f, k, w) in zip(idxs, spans):
+                active[i].active_s += share
+                active[i].reply = (np.ascontiguousarray(acc[off:off + f, :w]),
+                                   counts[off:off + f])
+    return results, dispatches  # type: ignore[return-value]

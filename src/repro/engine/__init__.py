@@ -6,13 +6,14 @@
 # execution.
 from .cache import GraphContext, LRUCache
 from .canonical import canonical_form, canonical_key
-from .engine import Engine, EngineOptions, EngineResult, EngineStats
+from .engine import (Engine, EngineOptions, EngineResult, EngineStats,
+                     EngineStream)
 from .language import QueryParseError, Vocab, fmt, parse
 from .planner import DeviceCaps, Plan, Planner
 from .stats import GraphStats, RigStats
 
 __all__ = [
-    "Engine", "EngineOptions", "EngineResult", "EngineStats",
+    "Engine", "EngineOptions", "EngineResult", "EngineStats", "EngineStream",
     "Vocab", "QueryParseError", "parse", "fmt",
     "canonical_form", "canonical_key",
     "Plan", "Planner", "DeviceCaps",

@@ -11,6 +11,13 @@ Larger patterns fall back to iterated color refinement (1-WL) with lexicographic
 tie-breaking; that is deterministic (same query text -> same key, so the
 cache stays correct) but may assign two isomorphic queries different keys,
 costing only a duplicate cache entry.
+
+The same caveat applies to *cyclic* patterns under ``reduce=True``: the
+transitive reduction of a cyclic graph is not unique, so two isomorphic
+cyclic queries may reduce to non-isomorphic forms and get different keys.
+For acyclic patterns (the common case) the reduction is unique and the
+key is a true isomorphism invariant — asserted property-based in
+``tests/engine/test_planner.py``.
 """
 
 from __future__ import annotations

@@ -3,9 +3,14 @@
 Pipeline per query::
 
     text ──parse──▶ PatternQuery ──TR+canonicalize──▶ key
-         ──plan-cache──▶ Plan (backend, sim algo, check method, ordering)
+         ──plan-cache──▶ Plan (backend, sim algo, check method, ordering,
+                               enum method, streaming chunk size)
          ──label-cache──▶ resident reachability/adjacency/interval labels
-         ──execute──▶ host GM  or  device JaxGM (batched in execute_many)
+         ──execute──▶ host GM  or  device JaxGM
+         ──execute_stream──▶ chunked lazy enumeration (host data path)
+         ──execute_many──▶ per-graph groups, canonical-form dedup, one
+                           vmapped device dispatch + one micro-batched
+                           frontier scheduler per group
 
 Cross-query state (everything the paper's per-query pipeline would
 otherwise recompute):
@@ -29,13 +34,13 @@ import time
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.graph import DataGraph
-from ..core.matcher import GM, MatchResult
-from ..core.mjoin import DEFAULT_LIMIT
+from ..core.matcher import GM, MatchResult, MatchStream
+from ..core.mjoin import DEFAULT_LIMIT, device_intersector
 from ..core.query import PatternQuery
 from .cache import GraphContext, LRUCache
 from .canonical import canonical_key
@@ -43,9 +48,13 @@ from .language import Vocab, fmt, parse
 from .planner import DEVICE, HOST, DeviceCaps, Plan, Planner
 from .stats import RigStats
 
-__all__ = ["EngineOptions", "EngineStats", "EngineResult", "Engine"]
+__all__ = ["EngineOptions", "EngineStats", "EngineResult", "EngineStream",
+           "Engine"]
 
 QueryLike = Union[str, PatternQuery]
+RequestLike = Union[QueryLike, Tuple[QueryLike, DataGraph]]
+
+_UNSET = object()
 
 _TPU_AVAILABLE: Optional[bool] = None
 
@@ -74,6 +83,7 @@ class EngineOptions:
     plan_cache_size: int = 256
     max_resident_graphs: int = 8
     force_backend: Optional[str] = None   # "host" | "device" | None
+    force_enum: Optional[str] = None      # fixed enum_method | None (planned)
     # route the frontier enumerator's AND+popcount through the Pallas
     # intersect kernel: None = auto (only on real TPU backends — the
     # interpreter fallback is orders of magnitude slower than numpy)
@@ -114,6 +124,16 @@ class EngineStats:
     rig_edges: int = 0
     truncated: bool = False
     enum_method: str = "backtrack"   # strategy that ran (device: jaxgm's)
+    # streaming (execute_stream)
+    streamed: bool = False
+    chunks: int = 0                  # result chunks yielded
+    chunk_size: int = 0              # planned/requested chunk rows
+    # batching (execute_many)
+    shared_exec: bool = False        # answered by a duplicate in the batch
+    # engine-wide plan-cache counters, snapshotted when this query finished
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_evictions: int = 0
 
 
 @dataclass
@@ -124,6 +144,78 @@ class EngineResult:
     plan: Plan
     stats: EngineStats
     key: str
+
+
+class EngineStream:
+    """Lazy result stream returned by :meth:`Engine.execute_stream`.
+
+    Iterate for ``(chunk, q.n)`` int64 ndarray chunks (global node ids,
+    query-node order) in the same lexicographic order as one-shot
+    ``execute``; every chunk except the last has exactly ``chunk_size``
+    rows.  Enumeration advances only as chunks are consumed — stopping
+    early (``close()``, or just abandoning the iterator after a ``break``)
+    never visits the tail, and hitting ``limit`` cuts the final chunk at
+    exactly ``limit`` rows with ``stats.truncated`` set.
+
+    ``stats`` and ``count`` are live during iteration; when the stream is
+    exhausted (or closed) the engine records timings, plan-cache counters
+    and — only on natural completion — the observed RIG statistics that
+    feed re-planning.
+    """
+
+    def __init__(self, engine: "Engine", entry: "_PlanEntry",
+                 match: MatchStream, stats: "EngineStats",
+                 query: PatternQuery, key: str):
+        self.engine = engine
+        self.match = match
+        self.query = query
+        self.plan = entry.plan
+        self.key = key
+        self.stats = stats
+        self._entry = entry
+        self._it = iter(match)
+        self._finalized = False
+
+    def __iter__(self) -> "EngineStream":
+        return self
+
+    def __next__(self):
+        try:
+            chunk = next(self._it)
+        except StopIteration:
+            self._finalize(completed=True)
+            raise
+        self.stats.chunks += 1
+        return chunk
+
+    def __enter__(self) -> "EngineStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Stop early: drops the suspended enumeration state and records
+        stats for the consumed prefix (no RIG-stats observation — a
+        partial count must not feed re-planning)."""
+        self.match.close()
+        self._finalize(completed=False)
+
+    @property
+    def count(self) -> int:
+        return self.match.count
+
+    def _finalize(self, completed: bool) -> None:
+        if self._finalized:
+            return
+        self._finalized = True
+        m = self.match
+        # an early-closed stream's partial count must not feed re-planning
+        self.engine._observe_host(self._entry, self.stats, m,
+                                  observe=completed)
+        self.stats.exec_s = m.matching_s + m.enumerate_s
+        self.engine.counters["stream_queries"] += 1
+        self.engine._finish(self.stats, m.count)
 
 
 @dataclass
@@ -150,7 +242,8 @@ class _Resident:
         self.options = options
         self.vocab = Vocab.for_graph(graph, names=label_names)
         self.planner = Planner(self.ctx.stats, caps=options.caps(),
-                               force_backend=options.force_backend)
+                               force_backend=options.force_backend,
+                               force_enum=options.force_enum)
         self._gm: Optional[GM] = None
         self._jgm = None
         self._jgm_error: Optional[str] = None
@@ -201,6 +294,8 @@ class Engine:
         self.counters: Dict[str, int] = {
             "queries": 0, "host_exec": 0, "device_exec": 0,
             "overflow_fallbacks": 0, "label_builds": 0,
+            "stream_queries": 0, "shared_exec": 0,
+            "frontier_batches": 0, "frontier_batch_dispatches": 0,
         }
         if graph is not None:
             self.register(graph, label_names=label_names)
@@ -297,21 +392,30 @@ class Engine:
         return f"{key} -> {entry.plan.explain()} ({cached})"
 
     # ------------------------------------------------------------ execution
-    def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
-                  stats: EngineStats, materialize: bool) -> MatchResult:
-        opts = entry.plan.gm_options(limit=self.options.limit,
-                                     materialize=materialize)
-        m = res.gm().match(qr, options=opts)
+    def _observe_host(self, entry: _PlanEntry, stats: EngineStats,
+                      m, observe: bool = True) -> None:
+        """Record one host execution (one-shot, streamed, or batched) into
+        per-query stats and — unless ``observe=False`` (e.g. an early-closed
+        stream) — the plan entry's observed RIG statistics."""
         stats.backend = HOST
         stats.sim_passes = m.sim_passes
         stats.rig_nodes = m.rig_nodes
         stats.rig_edges = m.rig_edges
         stats.truncated = m.truncated
         stats.enum_method = m.enum_method
-        entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
-                          sim_passes=m.sim_passes, matching_s=m.matching_s,
-                          enumerate_s=m.enumerate_s, count=m.count)
+        if observe:
+            entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
+                              sim_passes=m.sim_passes,
+                              matching_s=m.matching_s,
+                              enumerate_s=m.enumerate_s, count=m.count)
         self.counters["host_exec"] += 1
+
+    def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
+                  stats: EngineStats, materialize: bool) -> MatchResult:
+        opts = entry.plan.gm_options(limit=self.options.limit,
+                                     materialize=materialize)
+        m = res.gm().match(qr, options=opts)
+        self._observe_host(entry, stats, m)
         return m
 
     def _post_device(self, res: _Resident, qr: PatternQuery,
@@ -346,6 +450,9 @@ class Engine:
         stats.count = count
         stats.total_s = (time.perf_counter() - t_start if t_start is not None
                          else stats.parse_s + stats.plan_s + stats.exec_s)
+        stats.plan_cache_hits = self._plan_cache.hits
+        stats.plan_cache_misses = self._plan_cache.misses
+        stats.plan_cache_evictions = self._plan_cache.evictions
         self.counters["queries"] += 1
 
     def execute(self, query: QueryLike, *,
@@ -374,31 +481,116 @@ class Engine:
         return EngineResult(count=count, tuples=tuples, query=qr,
                             plan=entry.plan, stats=stats, key=key)
 
-    def execute_many(self, queries: Sequence[QueryLike], *,
+    def execute_stream(self, query: QueryLike, *,
+                       graph: Optional[DataGraph] = None,
+                       chunk_size: Optional[int] = None,
+                       limit=_UNSET) -> EngineStream:
+        """Plan one query and enumerate its results *lazily*, in fixed-size
+        chunks — the facade over :meth:`GM.match_stream` /
+        :func:`repro.core.mjoin.iter_tuples`.
+
+        Planning, label-cache handling and RIG construction run eagerly
+        (node selection is existence checking, not enumeration); the MJoin
+        enumeration itself advances only as the returned
+        :class:`EngineStream` is consumed, so an early-stopping consumer
+        never pays for the tail.  ``chunk_size=None`` uses the planner's
+        choice (estimated — and, on repeat queries, observed — result
+        cardinality); ``limit`` defaults to ``options.limit``.  Streaming
+        always runs the host data path (the plan's enum_method, including
+        ``frontier-device``, is honoured; the vmapped whole-device matcher
+        has no incremental mode — see ROADMAP).
+        """
+        res = self._resident(graph)
+        stats = EngineStats(streamed=True)
+        # parse/plan first: malformed text must not pay a cold label build
+        qr, key, entry = self._prepare(query, res, stats)
+        stats.label_cache_hit = res.ctx.ensure_labels()
+        if not stats.label_cache_hit:
+            self.counters["label_builds"] += 1
+        lim = self.options.limit if limit is _UNSET else limit
+        chunk = chunk_size if chunk_size is not None else \
+            entry.plan.chunk_size
+        stats.chunk_size = chunk
+        opts = entry.plan.gm_options(limit=lim, materialize=True)
+        m = res.gm().match_stream(qr, options=opts, chunk_size=chunk)
+        return EngineStream(self, entry, m, stats, qr, key)
+
+    def execute_many(self, queries: Sequence[RequestLike], *,
                      graph: Optional[DataGraph] = None
                      ) -> List[EngineResult]:
-        """Batched execution: device-planned queries go through the vmapped
-        device matcher in one dispatch; the rest run on the host."""
-        res = self._resident(graph)
-        # parse/plan the whole batch first: a malformed query raises before
-        # any cold label build is paid
+        """Batched execution with cross-request sharing.
+
+        Each item is query text, a :class:`PatternQuery`, or a
+        ``(query, graph)`` pair (mixing resident graphs in one batch).
+        Requests are grouped per resident graph; within a group the engine
+
+        1. parses and plans *everything* first (a malformed query raises
+           before any cold label build is paid),
+        2. builds the graph's label structures once,
+        3. answers requests with the same canonical key from one execution
+           (``stats.shared_exec`` on the copies),
+        4. runs device-planned queries through one vmapped dispatch, and
+           host ``frontier-device`` queries through one fused scheduler
+           that micro-batches their per-level ``(F, K, W)`` constraint
+           gathers into a single ``(ΣF, K, W)`` slab per round; remaining
+           host queries run sequentially.
+        """
+        items: List[Tuple[QueryLike, Optional[DataGraph]]] = []
+        for item in queries:
+            if isinstance(item, tuple):
+                q, g = item
+                items.append((q, g))
+            else:
+                items.append((item, graph))
+        # group indices per resident graph (registration happens here, so
+        # group order follows first appearance in the batch)
+        groups: "OrderedDict[int, Tuple[_Resident, List[int]]]" = \
+            OrderedDict()
+        residents: List[_Resident] = []
+        for i, (_, g) in enumerate(items):
+            res = self._resident(g)
+            groups.setdefault(id(res), (res, []))[1].append(i)
+            residents.append(res)
+        # parse/plan the whole batch first (admission control)
         prepared = []
-        for query in queries:
+        for i, (q, _) in enumerate(items):
             stats = EngineStats()
-            qr, key, entry = self._prepare(query, res, stats)
+            qr, key, entry = self._prepare(q, residents[i], stats)
             prepared.append((qr, key, entry, stats))
+        results: List[Optional[EngineResult]] = [None] * len(items)
+        for res, idxs in groups.values():
+            self._execute_group(res, idxs, prepared, results)
+        return results    # type: ignore[return-value]
+
+    def _execute_group(self, res: _Resident, idxs: List[int],
+                       prepared, results) -> None:
+        """Run one resident graph's share of an ``execute_many`` batch."""
         label_hit = res.ctx.ensure_labels()
         if not label_hit:
             self.counters["label_builds"] += 1
-        for i, (_, _, _, stats) in enumerate(prepared):
-            # resident for every query after the first in this batch
-            stats.label_cache_hit = label_hit or i > 0
+        for j, i in enumerate(idxs):
+            # resident for every query after the first in this group
+            prepared[i][3].label_cache_hit = label_hit or j > 0
 
-        device_idx = [i for i, (_, _, e, _) in enumerate(prepared)
-                      if e.plan.backend == DEVICE]
-        results: List[Optional[EngineResult]] = [None] * len(prepared)
+        # dedup by canonical key: the first occurrence executes, the rest
+        # are answered from its result (all batch members share the same
+        # counting-mode options, so the result is identical by definition)
+        rep_of: Dict[str, int] = {}
+        dups: Dict[int, List[int]] = {}
+        reps: List[int] = []
+        for i in idxs:
+            key = prepared[i][1]
+            if key in rep_of:
+                dups.setdefault(rep_of[key], []).append(i)
+            else:
+                rep_of[key] = i
+                reps.append(i)
 
-        jgm = res.jgm() if len(device_idx) else None
+        lane = {i: prepared[i][2].plan.batch_group() for i in reps}
+        device_idx = [i for i in reps if lane[i] == "device"]
+        fd_idx = [i for i in reps if lane[i] == "frontier-device"]
+
+        jgm = res.jgm() if device_idx else None
         if jgm is not None and len(device_idx) >= 2:
             t0 = time.perf_counter()
             batch = jgm.match_batch([prepared[i][0] for i in device_idx])
@@ -418,9 +610,33 @@ class Engine:
                                           key=key)
             device_idx = []
 
-        for i, (qr, key, entry, stats) in enumerate(prepared):
+        if len(fd_idx) >= 2:
+            # micro-batched frontier lane: one fused (ΣF, K, W) slab per
+            # scheduler round across all queries in the lane (the intersect
+            # kernel when jax is present, fused numpy otherwise)
+            t0 = time.perf_counter()
+            gm_opts = [prepared[i][2].plan.gm_options(
+                limit=self.options.limit, materialize=False) for i in fd_idx]
+            ms, dispatches = res.gm().match_batch_frontier(
+                [prepared[i][0] for i in fd_idx], gm_opts,
+                intersector=device_intersector())
+            dt = time.perf_counter() - t0
+            self.counters["frontier_batches"] += 1
+            self.counters["frontier_batch_dispatches"] += dispatches
+            for i, m in zip(fd_idx, ms):
+                qr, key, entry, stats = prepared[i]
+                self._observe_host(entry, stats, m)
+                stats.exec_s = dt / len(fd_idx)   # share of the fused run
+                self._finish(stats, m.count)
+                results[i] = EngineResult(count=m.count, tuples=None,
+                                          query=qr, plan=entry.plan,
+                                          stats=stats, key=key)
+            fd_idx = []
+
+        for i in reps:
             if results[i] is not None:
                 continue
+            qr, key, entry, stats = prepared[i]
             t0 = time.perf_counter()
             if i in device_idx and jgm is not None:
                 # singleton device query: non-batched dispatch
@@ -434,7 +650,25 @@ class Engine:
             self._finish(stats, count)
             results[i] = EngineResult(count=count, tuples=None, query=qr,
                                       plan=entry.plan, stats=stats, key=key)
-        return results    # type: ignore[return-value]
+
+        # fan the representatives' answers out to their duplicates
+        for rep, dlist in dups.items():
+            src = results[rep]
+            for i in dlist:
+                qr, key, entry, stats = prepared[i]
+                stats.shared_exec = True
+                stats.backend = src.stats.backend
+                stats.sim_passes = src.stats.sim_passes
+                stats.rig_nodes = src.stats.rig_nodes
+                stats.rig_edges = src.stats.rig_edges
+                stats.truncated = src.stats.truncated
+                stats.enum_method = src.stats.enum_method
+                stats.exec_s = 0.0
+                self.counters["shared_exec"] += 1
+                self._finish(stats, src.count)
+                results[i] = EngineResult(count=src.count, tuples=None,
+                                          query=qr, plan=entry.plan,
+                                          stats=stats, key=key)
 
     # ------------------------------------------------------------- insight
     def cache_info(self) -> Dict[str, int]:

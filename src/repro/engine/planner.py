@@ -62,9 +62,20 @@ class Plan:
     ordering: str = "jo"
     enum_method: str = "backtrack"  # backtrack | frontier | frontier-device
     sim_passes: Optional[int] = 4
+    chunk_size: int = 1024         # streaming chunk rows (execute_stream)
     est_cost: float = 0.0
     est_card: float = 0.0
     reasons: Tuple[str, ...] = ()
+
+    def batch_group(self) -> str:
+        """Execution lane for cross-request batching in ``execute_many``:
+        requests in the same lane on the same resident graph share one
+        dispatch (vmapped device matcher / fused frontier slabs)."""
+        if self.backend == DEVICE:
+            return "device"
+        if self.enum_method == "frontier-device":
+            return "frontier-device"
+        return "host"
 
     def gm_options(self, *, limit: Optional[int] = DEFAULT_LIMIT,
                    materialize: bool = False,
@@ -100,14 +111,22 @@ FRONTIER_EST_RESULTS = 4096
 # ... and observed RIG/result sizes that re-pick it on repeat executions.
 FRONTIER_RIG_NODES = 512
 FRONTIER_MIN_RESULTS = 2048
+# Streaming chunk-size bounds: small answer sets stream in small chunks
+# (low first-chunk latency), large ones in big chunks (amortized rechunk
+# and conversion overhead).
+STREAM_CHUNK_MIN = 64
+STREAM_CHUNK_MAX = 8192
+STREAM_TARGET_CHUNKS = 16          # aim for ~this many chunks per result set
 
 
 class Planner:
     def __init__(self, stats: GraphStats, caps: Optional[DeviceCaps] = None,
-                 force_backend: Optional[str] = None):
+                 force_backend: Optional[str] = None,
+                 force_enum: Optional[str] = None):
         self.stats = stats
         self.caps = caps or DeviceCaps()
         self.force_backend = force_backend
+        self.force_enum = force_enum
 
     # ------------------------------------------------------------- backend
     def _pick_backend(self, q: PatternQuery,
@@ -152,6 +171,9 @@ class Planner:
         return "frontier-device" if self.caps.frontier_device else "frontier"
 
     def _pick_enum(self, q: PatternQuery, reasons: List[str]) -> str:
+        if self.force_enum is not None:
+            reasons.append(f"enum method forced to {self.force_enum}")
+            return self.force_enum
         if self.stats.estimate_cardinality(q) >= FRONTIER_EST_RESULTS:
             reasons.append(
                 f"estimated answer set >= {FRONTIER_EST_RESULTS}: "
@@ -159,6 +181,17 @@ class Planner:
             return self._frontier_kind()
         reasons.append("small estimated answer set: backtracking enumeration")
         return "backtrack"
+
+    # ----------------------------------------------------------- chunk size
+    def pick_chunk_size(self, expected_results: float) -> int:
+        """Streaming chunk rows for an (estimated or observed) result count:
+        the power of two nearest ``expected / STREAM_TARGET_CHUNKS``,
+        clamped to [STREAM_CHUNK_MIN, STREAM_CHUNK_MAX]."""
+        target = max(expected_results, 1.0) / STREAM_TARGET_CHUNKS
+        c = STREAM_CHUNK_MIN
+        while c < target and c < STREAM_CHUNK_MAX:
+            c *= 2
+        return c
 
     # ----------------------------------------------------------------- API
     def plan(self, q: PatternQuery) -> Plan:
@@ -168,15 +201,22 @@ class Planner:
         sim = self._pick_sim(q, reasons)
         check = self._pick_check(q, reasons)
         enum = self._pick_enum(q, reasons)
+        est_card = self.stats.estimate_cardinality(q)
         return Plan(backend=backend, sim_algo=sim, check_method=check,
                     enum_method=enum,
+                    chunk_size=self.pick_chunk_size(est_card),
                     est_cost=self.stats.estimate_cost(q),
-                    est_card=self.stats.estimate_cardinality(q),
+                    est_card=est_card,
                     reasons=tuple(reasons))
 
     def refine(self, plan: Plan, q: PatternQuery,
                rig: RigStats) -> Plan:
         """Re-plan from observed RIG statistics (repeat executions)."""
+        if rig.observations:
+            # observed result counts re-pick the streaming chunk size
+            chunk = self.pick_chunk_size(rig.count)
+            if chunk != plan.chunk_size:
+                plan = replace(plan, chunk_size=chunk)
         if self.force_backend is not None:
             return plan
         if (plan.backend == DEVICE and rig.observations
@@ -186,6 +226,8 @@ class Planner:
                 reasons=plan.reasons + (
                     f"observed RIG has {rig.rig_nodes} nodes "
                     f"(<= {TINY_RIG_NODES}): host enumeration wins",))
+        if self.force_enum is not None:
+            return plan
         if rig.observations and plan.enum_method == "backtrack" and (
                 rig.rig_nodes >= FRONTIER_RIG_NODES
                 or rig.count >= FRONTIER_MIN_RESULTS):

@@ -9,8 +9,12 @@ layouts are bit-compatible little-endian, so the conversion is a view.
 
 Inputs are padded to kernel block multiples: F to the next power of two
 (>= 128, so interpret-mode retraces stay bounded to O(log F) distinct
-shapes), W to a multiple of 128 lanes.  Off TPU the kernel runs in
-interpreter mode — correct but slow, used by the equivalence tests.
+shapes), W to a multiple of 128 lanes, and K to the next power of two
+using all-ones rows (the AND identity — needed by the cross-request
+micro-batched path, where the fused ``(ΣF, K, W)`` slabs built by
+``repro.core.mjoin.mjoin_batched`` mix queries with different constraint
+counts round to round).  Off TPU the kernel runs in interpreter mode —
+correct but slow, used by the equivalence tests.
 """
 
 from __future__ import annotations
@@ -57,9 +61,12 @@ class DeviceIntersector:
         rows = np.ascontiguousarray(rows_u64).view(np.uint32)
         rows = rows.reshape(f, k, w)
         fp, wp = _pow2_at_least(f), _round_up(max(w, 128), 128)
-        if fp != f or wp != w:
-            padded = np.zeros((fp, k, wp), dtype=np.uint32)
-            padded[:f, :, :w] = rows
+        kp = _pow2_at_least(k, floor=1)
+        if fp != f or wp != w or kp != k:
+            padded = np.zeros((fp, kp, wp), dtype=np.uint32)
+            padded[:f, :k, :w] = rows
+            if kp != k:          # AND-identity rows keep real lanes intact
+                padded[:f, k:, :w] = np.uint32(0xFFFFFFFF)
             rows = padded
         bw = max(d for d in (512, 256, 128) if wp % d == 0)
         and32, counts = intersect_pallas(jnp.asarray(rows), bf=128, bw=bw,

@@ -1,0 +1,335 @@
+"""Streaming-enumeration equivalence: chunked == one-shot, lazily.
+
+The chunked generator API (``iter_tuples`` / ``MJoinStream``) must be a
+drop-in replacement for one-shot ``mjoin``: concatenating its chunks
+reproduces ``solve()``'s tuples byte-for-byte — same lexicographic order,
+same counts, same truncation — for every ``enum_method`` and every chunk
+size, while enumeration work is done *on demand* (early-stopping consumers
+read no further frontier slabs, observable in the stats counters).  The
+cross-query batcher (``mjoin_batched``) must agree with per-query counting
+while fusing the per-level constraint gathers into shared dispatches.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.bruteforce import answer_set, brute_force_answers
+from repro.core.mjoin import (_host_intersect_block, iter_tuples, mjoin,
+                              mjoin_batched, stack_slabs)
+from repro.core.ordering import get_order
+from repro.core.query import CHILD, query
+from repro.core.rig import build_rig
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+from repro.testing import given, settings, st
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:                                   # bare interpreter
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+HOST_METHODS = ("backtrack", "frontier")
+ALL_METHODS = HOST_METHODS + (("frontier-device",) if HAVE_JAX else ())
+CHUNK_SIZES = (1, 3, 64)
+
+
+def _rig_order(graph, q):
+    rig = build_rig(graph, q.transitive_reduction())
+    order = (list(range(q.n)) if rig.is_empty() else get_order(rig, "jo"))
+    return rig, order
+
+
+def _collect(stream):
+    chunks = list(stream)
+    n = stream.rig.query.n
+    cat = (np.vstack(chunks) if chunks
+           else np.empty((0, n), dtype=np.int64))
+    return chunks, cat
+
+
+def _assert_stream_equals_solve(graph, q, methods=None, chunks=CHUNK_SIZES,
+                                limit=None):
+    rig, order = _rig_order(graph, q)
+    ref = mjoin(rig, order, limit=limit, max_tuples=10**9)
+    for method in methods or ALL_METHODS:
+        for k in chunks:
+            stream = iter_tuples(rig, order, chunk_size=k, limit=limit,
+                                 method=method)
+            got_chunks, got = _collect(stream)
+            assert np.array_equal(got, ref.tuples), (method, k)
+            assert stream.count == ref.count, (method, k)
+            assert stream.stats.truncated == ref.stats.truncated
+            # fixed-size chunks: every chunk but the last has exactly k rows
+            assert all(len(c) == k for c in got_chunks[:-1]), (method, k)
+            if got_chunks:
+                assert 0 < len(got_chunks[-1]) <= k
+    return ref
+
+
+# ------------------------------------------------- chunked == one-shot
+@pytest.mark.parametrize("qtype", ["C", "H", "D"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_stream_equals_solve_all_methods(qtype, seed):
+    graph = random_labeled_graph(55, avg_degree=2.4, n_labels=4, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype=qtype, seed=seed + 20)
+    ref = _assert_stream_equals_solve(graph, q)
+    # sanity: the reference agrees with brute force
+    assert answer_set(ref.tuples) == answer_set(brute_force_answers(graph, q))
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["C", "H", "D"]),
+       st.sampled_from(CHUNK_SIZES), st.sampled_from(ALL_METHODS))
+@settings(max_examples=20, deadline=None)
+def test_stream_equivalence_property(seed, qtype, chunk, method):
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=5,
+                                 kind="uniform", seed=seed % 89)
+    q = random_query_from_graph(graph, n_nodes=3 + seed % 3, qtype=qtype,
+                                seed=seed)
+    rig, order = _rig_order(graph, q)
+    ref = mjoin(rig, order, limit=None)
+    stream = iter_tuples(rig, order, chunk_size=chunk, limit=None,
+                         method=method)
+    _, got = _collect(stream)
+    assert np.array_equal(got, ref.tuples)
+    assert stream.count == ref.count
+
+
+@needs_jax
+@pytest.mark.parametrize("seed", [0, 1])
+def test_stream_device_interpret_equivalence(seed):
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=seed + 5)
+    _assert_stream_equals_solve(graph, q, methods=("frontier-device",),
+                                chunks=(3, 64))
+
+
+# ------------------------------------------------------- limit semantics
+def test_stream_limit_mid_chunk_exact():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    full = mjoin(rig, order, limit=None)
+    assert full.count > 70
+    for method in ALL_METHODS:
+        for lim in (1, 10, full.count, full.count + 1):
+            stream = iter_tuples(rig, order, chunk_size=64, limit=lim,
+                                 method=method)
+            _, got = _collect(stream)
+            want = min(lim, full.count)
+            # no over-yield from the last slab: exactly `limit` rows out
+            assert len(got) == want, (method, lim)
+            assert stream.count == want
+            assert np.array_equal(got, full.tuples[:want])
+            assert stream.stats.truncated == (full.count >= lim)
+
+
+def test_stream_limit_zero():
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=2, seed=1)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="C", seed=2)
+    rig, order = _rig_order(graph, q)
+    for method in HOST_METHODS:
+        stream = iter_tuples(rig, order, chunk_size=4, limit=0,
+                             method=method)
+        assert list(stream) == []
+        assert stream.count == 0 and stream.stats.truncated
+
+
+# --------------------------------------------------- laziness / pushdown
+def test_stream_early_stop_skips_frontier_slabs():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    # tiny slabs so the last level needs many gather rounds
+    full = iter_tuples(rig, order, chunk_size=8, limit=None,
+                       method="frontier", slab_rows=4)
+    list(full)
+    early = iter_tuples(rig, order, chunk_size=8, limit=None,
+                        method="frontier", slab_rows=4)
+    next(iter(early))
+    early.close()
+    assert early.stats.intersections < full.stats.intersections
+    # a limit has the same effect without the consumer stopping by itself
+    limited = iter_tuples(rig, order, chunk_size=8, limit=8,
+                          method="frontier", slab_rows=4)
+    list(limited)
+    assert limited.stats.truncated
+    assert limited.stats.intersections < full.stats.intersections
+
+
+@needs_jax
+def test_stream_early_stop_skips_device_dispatches():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    full = iter_tuples(rig, order, chunk_size=8, limit=None,
+                       method="frontier-device", slab_rows=4)
+    list(full)
+    early = iter_tuples(rig, order, chunk_size=8, limit=None,
+                        method="frontier-device", slab_rows=4)
+    next(iter(early))
+    early.close()
+    assert full.stats.device_calls > 1
+    assert early.stats.device_calls < full.stats.device_calls
+
+
+def test_stream_backtrack_early_stop_suspends_search():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    full = iter_tuples(rig, order, chunk_size=4, method="backtrack")
+    list(full)
+    early = iter_tuples(rig, order, chunk_size=4, method="backtrack")
+    next(iter(early))
+    early.close()
+    assert early.stats.expanded < full.stats.expanded
+
+
+# ------------------------------------------------------------ edge cases
+def test_stream_empty_rig():
+    graph = random_labeled_graph(50, avg_degree=2.0, n_labels=3, seed=5)
+    q = query(labels=[0, 99], edges=[(0, 1, CHILD)])
+    rig, order = _rig_order(graph, q)
+    for method in HOST_METHODS:
+        stream = iter_tuples(rig, order, chunk_size=4, method=method)
+        assert list(stream) == []
+        assert stream.count == 0 and not stream.stats.truncated
+
+
+def test_stream_single_node_query():
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=3, seed=6)
+    q = query(labels=[1], edges=[])
+    _assert_stream_equals_solve(graph, q, methods=HOST_METHODS)
+    _assert_stream_equals_solve(graph, q, methods=HOST_METHODS, limit=2)
+
+
+def test_stream_disconnected_pattern():
+    graph = random_labeled_graph(30, avg_degree=2.0, n_labels=3, seed=7)
+    q = query(labels=[0, 1], edges=[])                  # cartesian product
+    _assert_stream_equals_solve(graph, q, methods=HOST_METHODS)
+
+
+def test_stream_overflow_falls_back_to_backtrack():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    ref = mjoin(rig, order, limit=None)
+    stream = iter_tuples(rig, order, chunk_size=16, limit=None,
+                         method="frontier", max_frontier=2)
+    _, got = _collect(stream)
+    assert stream.stats.method == "backtrack"           # fell back
+    assert np.array_equal(got, ref.tuples)
+
+
+def test_stream_rejects_bad_arguments():
+    graph = random_labeled_graph(20, avg_degree=2.0, n_labels=2, seed=0)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="C", seed=1)
+    rig, order = _rig_order(graph, q)
+    with pytest.raises(ValueError):
+        iter_tuples(rig, order, method="nope")
+    with pytest.raises(ValueError):
+        iter_tuples(rig, order, chunk_size=0)
+
+
+# ----------------------------------------------------- cross-query batch
+def _batch_jobs(graph, queries, limit=None):
+    jobs = []
+    for q in queries:
+        rig, order = _rig_order(graph, q)
+        jobs.append((rig, order, limit))
+    return jobs
+
+
+def test_mjoin_batched_matches_singles():
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=1)
+    qs = [random_query_from_graph(graph, n_nodes=n, qtype=t, seed=s)
+          for n, t, s in [(3, "C", 2), (4, "H", 3), (3, "D", 4), (4, "D", 5)]]
+    jobs = _batch_jobs(graph, qs)
+    results, dispatches = mjoin_batched(jobs)
+    assert dispatches >= 1
+    per_query_calls = 0
+    for (rig, order, _), res in zip(jobs, results):
+        one = mjoin(rig, order, limit=None, materialize=False,
+                    method="frontier")
+        assert res.count == one.count
+        assert res.stats.truncated == one.stats.truncated
+        per_query_calls += max(res.stats.device_calls, 1)
+    # micro-batching: fused dispatches, not one per query per level
+    assert dispatches < per_query_calls
+
+
+def test_mjoin_batched_respects_per_job_limits():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig, order = _rig_order(graph, q)
+    full = mjoin(rig, order, limit=None, materialize=False).count
+    assert full > 10
+    results, _ = mjoin_batched([(rig, order, 5), (rig, order, None),
+                                (rig, order, full + 1)])
+    assert [r.count for r in results] == [5, full, full]
+    assert [r.stats.truncated for r in results] == [True, False, False]
+
+
+def test_mjoin_batched_empty_rig_and_overflow_jobs():
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=1)
+    q_empty = query(labels=[0, 99], edges=[(0, 1, CHILD)])
+    q_big = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig_e, order_e = _rig_order(graph, q_empty)
+    rig_b, order_b = _rig_order(graph, q_big)
+    want = mjoin(rig_b, order_b, limit=None, materialize=False).count
+    results, _ = mjoin_batched([(rig_e, order_e, None),
+                                (rig_b, order_b, None)],
+                               max_frontier=2)       # forces overflow
+    assert results[0].count == 0
+    assert results[1].count == want
+    assert results[1].stats.method == "backtrack"    # per-job fallback
+
+
+@needs_jax
+def test_mjoin_batched_device_intersector():
+    from repro.core.mjoin import device_intersector
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=1)
+    qs = [random_query_from_graph(graph, n_nodes=3, qtype=t, seed=s)
+          for t, s in [("C", 2), ("H", 3), ("D", 4)]]
+    jobs = _batch_jobs(graph, qs)
+    host_res, host_disp = mjoin_batched(jobs)
+    inter = device_intersector()
+    assert inter is not None
+    before = inter.calls
+    dev_res, dev_disp = mjoin_batched(jobs, intersector=inter)
+    assert inter.calls - before == dev_disp          # one kernel call each
+    for h, d in zip(host_res, dev_res):
+        assert h.count == d.count
+    assert dev_res[0].stats.method == "frontier-device"
+
+
+def test_stack_slabs_is_and_exact():
+    rng = np.random.default_rng(0)
+    blocks = [rng.integers(0, 2**63, size=(f, k, w), dtype=np.uint64)
+              for f, k, w in [(3, 1, 2), (5, 3, 1), (2, 2, 4)]]
+    big, spans = stack_slabs(blocks)
+    acc, counts = _host_intersect_block(big)
+    for b, (off, f, k, w) in zip(blocks, spans):
+        want = np.bitwise_and.reduce(b, axis=1)
+        assert np.array_equal(acc[off:off + f, :w], want)
+        assert np.array_equal(counts[off:off + f],
+                              np.bitwise_count(want).sum(axis=1))
+        # padding contributes no bits beyond each job's own words
+        assert not acc[off:off + f, w:].any()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_mjoin_batched_property(seed):
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=4,
+                                 kind="uniform", seed=seed % 53)
+    qs = [random_query_from_graph(graph, n_nodes=3 + (seed + i) % 2,
+                                  qtype=["C", "H", "D"][(seed + i) % 3],
+                                  seed=seed + 7 * i) for i in range(3)]
+    jobs = _batch_jobs(graph, qs)
+    results, _ = mjoin_batched(jobs)
+    for (rig, order, _), res in zip(jobs, results):
+        assert res.count == mjoin(rig, order, limit=None,
+                                  materialize=False).count

@@ -219,6 +219,136 @@ def test_engine_surfaces_enum_method():
                                      "frontier-device")
 
 
+# ---------------------------------------------------------------- streaming
+def test_execute_stream_matches_execute():
+    g = random_labeled_graph(400, avg_degree=3.0, n_labels=4, seed=7)
+    eng = Engine(g, options=EngineOptions(device_min_nodes=10**9))
+    text = "(a:L0)-/->(b:L1)-//->(c:L2)"
+    ref = eng.execute(text)
+    for chunk in (1, 3, 64):
+        st = eng.execute_stream(text, chunk_size=chunk)
+        chunks = list(st)
+        cat = (np.vstack(chunks) if chunks
+               else np.empty((0, 3), dtype=np.int64))
+        assert np.array_equal(cat, ref.tuples)
+        assert st.count == ref.count == st.stats.count
+        assert st.stats.streamed and st.stats.chunks == len(chunks)
+        assert all(len(c) == chunk for c in chunks[:-1])
+
+
+def test_execute_stream_truncated_at_limit_mid_chunk():
+    """Regression: a limit hit mid-chunk must report truncated=True and
+    yield *exactly* `limit` rows (no over-yield from the last slab)."""
+    g = random_labeled_graph(400, avg_degree=3.0, n_labels=4, seed=7)
+    text = "(a:L0)-/->(b:L1)-//->(c:L2)"
+    for enum in ("backtrack", "frontier"):
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10**9,
+                                              force_enum=enum))
+        full = eng.execute(text)
+        assert full.count > 10
+        st = eng.execute_stream(text, chunk_size=64, limit=10)
+        chunks = list(st)
+        assert sum(len(c) for c in chunks) == 10 == st.stats.count
+        assert st.stats.truncated
+        assert np.array_equal(np.vstack(chunks), full.tuples[:10])
+        # limit >= count: complete stream, not truncated
+        st2 = eng.execute_stream(text, chunk_size=64, limit=full.count + 1)
+        assert sum(len(c) for c in list(st2)) == full.count
+        assert not st2.stats.truncated
+
+
+def test_execute_stream_early_close_records_partial_stats():
+    g = random_labeled_graph(400, avg_degree=3.0, n_labels=4, seed=7)
+    eng = Engine(g, options=EngineOptions(device_min_nodes=10**9))
+    text = "(a:L0)-/->(b:L1)-//->(c:L2)"
+    with eng.execute_stream(text, chunk_size=4) as st:
+        first = next(iter(st))
+        assert len(first) == 4
+    # context exit closes the stream: stats recorded for the prefix only
+    assert st.stats.count == 4 and st.stats.chunks == 1
+    assert eng.counters["stream_queries"] == 1
+    assert eng.counters["queries"] == 1
+
+
+def test_execute_stream_uses_planner_chunk_size():
+    g = random_labeled_graph(300, avg_degree=3.0, n_labels=5, seed=0)
+    eng = _host_engine(g)
+    st = eng.execute_stream("(a:L0)-//->(b:L1)")
+    assert st.stats.chunk_size == st.plan.chunk_size > 0
+    list(st)
+    st2 = eng.execute_stream("(a:L0)-//->(b:L1)", chunk_size=7)
+    assert st2.stats.chunk_size == 7
+    list(st2)
+
+
+# ------------------------------------------- execute_many: grouping/sharing
+def test_execute_many_dedup_shares_one_execution():
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=5, seed=2)
+    eng = _host_engine(g)
+    text = "(a:L0)-//->(b:L1)"
+    iso = "(y:L1)<-//-(x:L0)"                  # isomorphic spelling
+    batch = eng.execute_many([text, text, iso, "(a:L2)-/->(b:L3)"])
+    want = eng.execute(text).count
+    assert [r.count for r in batch[:3]] == [want] * 3
+    assert not batch[0].stats.shared_exec
+    assert batch[1].stats.shared_exec and batch[2].stats.shared_exec
+    assert not batch[3].stats.shared_exec
+    # one host execution for the three isomorphic requests, one for the 4th,
+    # plus the `want` reference execution above
+    assert eng.counters["shared_exec"] == 2
+    assert eng.counters["host_exec"] == 3
+
+
+def test_execute_many_groups_by_resident_graph():
+    g1 = random_labeled_graph(200, n_labels=4, seed=0)
+    g2 = random_labeled_graph(200, n_labels=4, seed=1)
+    eng = _host_engine(g1)
+    text = "(a:L0)-//->(b:L1)"
+    batch = eng.execute_many([text, (text, g2), text, ("(a:L1)-/->(b:L2)", g2)])
+    assert batch[0].count == eng.execute(text).count
+    assert batch[1].count == eng.execute(text, graph=g2).count
+    assert batch[2].stats.shared_exec           # dedup within g1's group
+    assert not batch[1].stats.shared_exec       # g2 is a different group
+    assert eng.counters["label_builds"] == 2    # one cold build per graph
+    assert batch[2].count == batch[0].count
+
+
+def test_execute_many_micro_batches_frontier_device():
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=5, seed=2)
+    ref = _host_engine(g)
+    eng = Engine(g, options=EngineOptions(
+        device_min_nodes=10**9, materialize=False,
+        force_enum="frontier-device", frontier_device=True))
+    qs = ["(a:L0)-//->(b:L1)", "(a:L1)-//->(b:L2)", "(a:L2)-//->(b:L3)"]
+    batch = eng.execute_many(qs)
+    for q, r in zip(qs, batch):
+        assert r.count == ref.execute(q).count
+        assert r.stats.enum_method == "frontier-device"
+        assert r.stats.backend == "host"
+    assert eng.counters["frontier_batches"] == 1
+    # fused dispatches, not one per query per level
+    assert 1 <= eng.counters["frontier_batch_dispatches"] < len(qs)
+
+
+# ------------------------------------------------ plan-cache stat snapshots
+def test_engine_stats_snapshot_plan_cache_counters():
+    g = random_labeled_graph(100, n_labels=6, seed=0)
+    eng = Engine(g, options=EngineOptions(device_min_nodes=10**9,
+                                          materialize=False,
+                                          plan_cache_size=2))
+    batch = eng.execute_many(["(a:L0)-/->(b:L1)", "(a:L0)-/->(b:L1)",
+                              "(a:L1)-/->(b:L2)", "(a:L2)-/->(b:L3)"])
+    info = eng.cache_info()
+    last = batch[-1].stats
+    assert last.plan_cache_hits == info["plan_hits"] == 1     # the duplicate
+    assert last.plan_cache_misses == info["plan_misses"] == 3
+    assert last.plan_cache_evictions == info["plan_evictions"] == 1
+    # snapshots are monotone across the batch
+    assert batch[0].stats.plan_cache_misses <= last.plan_cache_misses
+    r = eng.execute("(a:L2)-/->(b:L3)")        # still resident: a hit
+    assert r.stats.plan_cache_hits == 2
+
+
 def test_engine_refines_enum_method_from_observed_rig():
     from repro.engine.planner import (FRONTIER_MIN_RESULTS,
                                       FRONTIER_RIG_NODES)

@@ -1,5 +1,6 @@
 """Query-language round-trip and parse-error tests."""
 
+import numpy as np
 import pytest
 
 from repro.core import CHILD, DESC, PatternQuery, QueryEdge, query
@@ -13,6 +14,17 @@ from repro.testing import given, settings, st
 # ------------------------------------------------------------- round trips
 def _strip_name(q: PatternQuery) -> PatternQuery:
     return PatternQuery(labels=list(q.labels), edges=list(q.edges))
+
+
+def _arbitrary_query(rng: np.random.Generator, n_max: int = 7) -> PatternQuery:
+    """A structurally arbitrary (possibly disconnected, multi-segment)
+    normalized pattern — broader than the subgraph-sampled generators."""
+    n = int(rng.integers(1, n_max + 1))
+    labels = [int(x) for x in rng.integers(0, 5, size=n)]
+    edges = [(s, d, int(rng.integers(0, 2)))
+             for s in range(n) for d in range(n)
+             if s != d and rng.random() < 0.3]
+    return query(labels, edges)
 
 
 def test_round_trip_simple_chain():
@@ -61,6 +73,23 @@ def test_round_trip_property(seed, qtype, n_nodes):
     q = _strip_name(random_query_from_graph(g, n_nodes, qtype=qtype,
                                             seed=seed))
     assert parse(fmt(q)) == q
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_round_trip_property_arbitrary_structure(seed):
+    """parse(fmt(q)) == q for arbitrary generated patterns, including
+    disconnected ones and shapes whose chain decomposition needs explicit
+    node declarations."""
+    q = _arbitrary_query(np.random.default_rng(seed))
+    assert parse(fmt(q)) == q, fmt(q)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_round_trip_arbitrary_structure_examples(seed):
+    # the bare-interpreter (no hypothesis) slice of the property above
+    q = _arbitrary_query(np.random.default_rng(seed))
+    assert parse(fmt(q)) == q, fmt(q)
 
 
 def test_reverse_edge_syntax():

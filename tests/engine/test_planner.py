@@ -1,12 +1,16 @@
 """Canonicalization and planner-selection tests."""
 
+import numpy as np
 import pytest
 
 from repro.core import CHILD, DESC, query
-from repro.core.query import paper_example_query
+from repro.core.query import PatternQuery, paper_example_query
 from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
 from repro.engine import DeviceCaps, GraphStats, Planner, RigStats
 from repro.engine import canonical_form, canonical_key, parse
+from repro.engine.planner import (STREAM_CHUNK_MAX, STREAM_CHUNK_MIN)
+from repro.testing import given, settings, st
 
 
 # --------------------------------------------------------- canonical form
@@ -44,6 +48,65 @@ def test_canonical_form_idempotent():
     cq, _ = canonical_form(q)
     cq2, _ = canonical_form(cq)
     assert cq == cq2
+
+
+def _relabeled(q: PatternQuery, perm) -> PatternQuery:
+    """Apply a node renaming (perm[old] = new) and re-normalize."""
+    labels = [0] * q.n
+    for old, new in enumerate(perm):
+        labels[new] = q.labels[old]
+    return query(labels, [(perm[e.src], perm[e.dst], e.kind)
+                          for e in q.edges])
+
+
+def _random_small_query(rng: np.random.Generator) -> PatternQuery:
+    g = random_labeled_graph(100, avg_degree=3.0, n_labels=4,
+                             seed=int(rng.integers(0, 50)))
+    n = int(rng.integers(2, 6))
+    return random_query_from_graph(g, n, qtype=["C", "H", "D"][n % 3],
+                                   seed=int(rng.integers(0, 10**6)))
+
+
+def _random_dag_query(rng: np.random.Generator) -> PatternQuery:
+    """Random *acyclic* pattern (edges go index-upward only): the class for
+    which the transitive reduction — and therefore the full cache key — is
+    unique up to isomorphism."""
+    n = int(rng.integers(2, 7))
+    labels = [int(x) for x in rng.integers(0, 4, size=n)]
+    edges = [(s, d, int(rng.integers(0, 2)))
+             for s in range(n) for d in range(s + 1, n)
+             if rng.random() < 0.4]
+    edges = edges or [(0, n - 1, DESC)]
+    return query(labels, edges)
+
+
+def _check_relabel_invariance(rng, reduce):
+    q = _random_dag_query(rng) if reduce else _random_small_query(rng)
+    q2 = _relabeled(q, rng.permutation(q.n).tolist())
+    assert canonical_key(q, reduce=reduce) == canonical_key(q2,
+                                                            reduce=reduce)
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_canonical_key_invariant_under_relabeling_property(seed):
+    """Node-relabeled isomorphic queries share one canonical key: exactly
+    for any pattern with n <= 6 when no reduction is applied, and
+    end-to-end (TR + canonicalization — the plan-cache key) for acyclic
+    patterns, where the transitive reduction is unique.  (Isomorphic
+    *cyclic* patterns may reduce to non-isomorphic forms and cost a
+    duplicate cache entry — a documented, harmless miss.)"""
+    rng = np.random.default_rng(seed)
+    _check_relabel_invariance(rng, reduce=False)
+    _check_relabel_invariance(rng, reduce=True)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_canonical_key_invariant_under_relabeling_examples(seed):
+    # the bare-interpreter (no hypothesis) slice of the property above
+    rng = np.random.default_rng(seed)
+    _check_relabel_invariance(rng, reduce=False)
+    _check_relabel_invariance(rng, reduce=True)
 
 
 # --------------------------------------------------------------- planning
@@ -187,6 +250,49 @@ def test_refine_tiny_rig_reverts_to_backtrack():
     rig.observe(rig_nodes=8, rig_edges=10, sim_passes=2, matching_s=0.0,
                 enumerate_s=0.0, count=3)
     assert planner.refine(plan, q, rig).enum_method == "backtrack"
+
+
+# -------------------------------------------------------------- chunk size
+def test_pick_chunk_size_bounds_and_monotonicity():
+    planner = Planner(_stats(1000))
+    assert planner.pick_chunk_size(0) == STREAM_CHUNK_MIN
+    assert planner.pick_chunk_size(10**12) == STREAM_CHUNK_MAX
+    sizes = [planner.pick_chunk_size(x) for x in (10, 1e3, 1e5, 1e7)]
+    assert sizes == sorted(sizes)
+    assert all(s & (s - 1) == 0 for s in sizes)        # powers of two
+
+
+def test_plan_and_refine_set_chunk_size():
+    planner = Planner(_stats(1000))
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    plan = planner.plan(q)
+    assert plan.chunk_size == planner.pick_chunk_size(plan.est_card)
+    rig = RigStats()
+    rig.observe(rig_nodes=50, rig_edges=200, sim_passes=2, matching_s=0.0,
+                enumerate_s=0.0, count=1_000_000)
+    refined = planner.refine(plan, q, rig)
+    assert refined.chunk_size == planner.pick_chunk_size(1_000_000)
+
+
+def test_force_enum():
+    planner = Planner(_stats(1000), force_enum="frontier")
+    q = parse("(a:L0)-/->(b:L1)")
+    plan = planner.plan(q)
+    assert plan.enum_method == "frontier"
+    rig = RigStats()
+    rig.observe(rig_nodes=2, rig_edges=1, sim_passes=1, matching_s=0.0,
+                enumerate_s=0.0, count=1)
+    assert planner.refine(plan, q, rig).enum_method == "frontier"
+
+
+def test_batch_group_lanes():
+    s = _stats(2000)
+    q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
+    assert Planner(s).plan(q).batch_group() == "device"
+    assert Planner(s, force_backend="host").plan(q).batch_group() == "host"
+    fd = Planner(s, force_backend="host",
+                 force_enum="frontier-device").plan(q)
+    assert fd.batch_group() == "frontier-device"
 
 
 def test_frontier_device_caps_flag():
