@@ -26,13 +26,13 @@ Standalone run writes the machine-readable baseline ``BENCH_engine.json``:
 
 from __future__ import annotations
 
-import json
 import time
 from typing import List
 
 from repro.data.graphs import random_labeled_graph
 from repro.engine import Engine, EngineOptions
 
+from ._harness import bench_main
 from .common import Row, bench_queries
 
 
@@ -76,6 +76,14 @@ def run(quick: bool = True) -> List[Row]:
     assert r.stats.plan_cache_hit
     rows.append(Row("engine_warm_isomorphic", iso_s * 1e6,
                     {"plan_cache_hit": True}))
+
+    # warm profiled query: per-phase breakdown from the lifecycle trace
+    # (also the measured cost of running with profile=True on a warm path)
+    prof = eng.execute(text, profile=True)
+    phase_us = {f"us_{s.name}": round(s.duration_s * 1e6, 1)
+                for s in prof.trace.children}
+    rows.append(Row("engine_warm_profiled", prof.stats.total_s * 1e6,
+                    {"unprofiled_us": round(warm_s * 1e6, 1), **phase_us}))
 
     # ---- streaming: first-chunk latency vs one-shot materialization -----
     eng, g = _fresh_engine(n, seed=1, materialize=True)
@@ -168,30 +176,8 @@ def run(quick: bool = True) -> List[Row]:
 
 
 def main() -> None:
-    import argparse
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="small graphs, CI smoke mode (the default)")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--out", default="BENCH_engine.json")
-    args = ap.parse_args()
-    assert not (args.quick and args.full), "--quick and --full conflict"
-
-    rows = run(quick=not args.full)
-    print("name,us_per_call,derived")
-    for r in rows:
-        print(r.csv())
-    payload = {
-        "bench": "engine",
-        "mode": "full" if args.full else "quick",
-        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 1),
-                  "derived": r.derived} for r in rows],
-    }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {args.out}")
+    bench_main("engine", run, default_out="BENCH_engine.json",
+               quick_default=True)
 
 
 if __name__ == "__main__":

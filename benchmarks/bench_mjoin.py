@@ -22,7 +22,6 @@ CI runs quick mode as a smoke step (artifact uploaded, no perf assertion).
 
 from __future__ import annotations
 
-import json
 import time
 from typing import List
 
@@ -32,6 +31,7 @@ from repro.core.rig import build_rig
 from repro.data.graphs import random_labeled_graph
 from repro.data.queries import random_query_from_graph
 
+from ._harness import bench_main
 from .common import Row
 
 
@@ -81,12 +81,16 @@ def run(quick: bool = True, device: bool = False) -> List[Row]:
             tag = f"mjoin_{method}" + ("_mat" if mat else "_count")
             timings[tag] = dt
             counts[tag] = res.count
-            rows.append(Row(tag, dt * 1e6, {
+            derived = {
                 "results": res.count,
                 "ran": res.stats.method,
                 "truncated": res.stats.truncated,
                 "frontier_peak": res.stats.frontier_peak,
-                "results_per_s": round(res.count / max(dt, 1e-9))}))
+                "results_per_s": round(res.count / max(dt, 1e-9))}
+            if res.stats.device_calls:
+                derived["device_calls"] = res.stats.device_calls
+                derived["device_ms"] = round(res.stats.device_s * 1e3, 2)
+            rows.append(Row(tag, dt * 1e6, derived))
 
     assert len({counts[f"mjoin_{m}_count"] for m in methods}) == 1, counts
     for mode in ("count", "mat"):
@@ -98,30 +102,8 @@ def run(quick: bool = True, device: bool = False) -> List[Row]:
 
 
 def main() -> None:
-    import argparse
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="small sizes for the CI smoke step")
-    ap.add_argument("--device", action="store_true",
-                    help="also run the frontier-device (Pallas) path")
-    ap.add_argument("--out", default="BENCH_mjoin.json")
-    args = ap.parse_args()
-
-    rows = run(quick=args.quick, device=args.device)
-    print("name,us_per_call,derived")
-    for r in rows:
-        print(r.csv())
-    payload = {
-        "bench": "mjoin",
-        "mode": "quick" if args.quick else "full",
-        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 1),
-                  "derived": r.derived} for r in rows],
-    }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {args.out}")
+    bench_main("mjoin", run, default_out="BENCH_mjoin.json",
+               quick_default=False, device_flag=True)
 
 
 if __name__ == "__main__":

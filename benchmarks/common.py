@@ -1,40 +1,18 @@
-"""Shared harness for the paper-figure benchmarks.
+"""Shared workload builders for the paper-figure benchmarks.
 
 Every bench module exposes ``run(quick: bool) -> list[Row]``; ``run.py``
 executes them all and prints ``name,us_per_call,derived`` CSV (one line per
 measured configuration), mirroring the paper's per-query reporting.
+``Row`` and the timing helpers live in :mod:`benchmarks._harness` (built on
+``repro.obs``) and are re-exported here for the per-figure modules.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
-
 from repro.data.graphs import random_labeled_graph
 from repro.data.queries import random_query_from_graph, template_queries
 
-
-@dataclass
-class Row:
-    name: str
-    us_per_call: float
-    derived: Dict[str, Any] = field(default_factory=dict)
-
-    def csv(self) -> str:
-        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
-        return f"{self.name},{self.us_per_call:.1f},{d}"
-
-
-def timeit(fn: Callable, repeats: int = 3) -> float:
-    """Median wall time in microseconds."""
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+from ._harness import Measurement, Row, measure, timeit  # noqa: F401
 
 
 _GRAPH_CACHE: dict = {}

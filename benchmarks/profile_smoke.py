@@ -1,0 +1,154 @@
+"""CI profile smoke: lifecycle traces exist, disabled tracing stays free.
+
+Three checks, designed to run on every CI push:
+
+1. **coverage** — one profiled query per execution mode (one-shot,
+   streaming, ``execute_many``) must return a span tree containing every
+   lifecycle phase (parse → canonicalize → plan → labels → rig →
+   enumerate → materialize);
+2. **overhead** — warm ``profile=False`` latency is re-measured and
+   compared against the ``engine_warm_query`` row of a freshly produced
+   ``BENCH_engine.json`` from the same runner (the preceding CI bench
+   step): the disabled-tracing path must stay within ``--max-overhead``
+   (default 5%).  Cross-machine baselines are meaningless for a wall-clock
+   bound, so a missing/foreign baseline downgrades the check to a report;
+3. **artifact** — the one-shot trace tree plus the measurements land in a
+   versioned JSON file for upload.
+
+  PYTHONPATH=src python -m benchmarks.profile_smoke \
+      [--baseline BENCH_engine.json] [--out TRACE_profile_smoke.json] \
+      [--max-overhead 0.05]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.data.graphs import random_labeled_graph
+from repro.engine import Engine, EngineOptions, render_trace
+
+LIFECYCLE = {"parse", "canonicalize", "plan", "labels", "rig", "enumerate",
+             "materialize"}
+
+# mirror bench_engine's quick-mode cold/warm workload so the committed and
+# CI-produced engine_warm_query rows are directly comparable
+GRAPH_NODES = 1000
+QUERY = "(a:L0)-/->(b:L1)-//->(c:L2)"
+
+
+def _require_lifecycle(trace, mode: str) -> None:
+    assert trace is not None, f"{mode}: profile=True returned no trace"
+    missing = LIFECYCLE - set(trace.phase_names())
+    assert not missing, f"{mode}: trace missing lifecycle spans {missing}"
+
+
+def _median_warm_us(eng, query, repeats: int = 40) -> float:
+    """Best-of-3 medians of the warm unprofiled path, in microseconds —
+    robust against one noisy scheduling window."""
+    meds = []
+    for _ in range(3):
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            eng.execute(query)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        meds.append(ts[len(ts) // 2])
+    return min(meds) * 1e6
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_engine.json",
+                    help="bench baseline with an engine_warm_query row, "
+                         "produced on THIS machine")
+    ap.add_argument("--out", default="TRACE_profile_smoke.json")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="max allowed disabled-tracing warm regression "
+                         "vs the baseline (fraction)")
+    ap.add_argument("--enforce", action="store_true",
+                    help="fail (exit 1) when the overhead bound is "
+                         "exceeded; default reports only")
+    args = ap.parse_args()
+
+    g = random_labeled_graph(GRAPH_NODES, avg_degree=3.0, n_labels=8,
+                             seed=0)
+    eng = Engine(g, options=EngineOptions(materialize=False,
+                                          device_min_nodes=10 ** 9))
+
+    # ---- 1. lifecycle coverage across all three execution modes ---------
+    res = eng.execute(QUERY, profile=True)
+    _require_lifecycle(res.trace, "execute")
+    stream = eng.execute_stream(QUERY, profile=True, chunk_size=256)
+    n_stream = sum(len(c) for c in stream)
+    _require_lifecycle(stream.trace, "execute_stream")
+    batch = eng.execute_many([QUERY, QUERY], profile=True)
+    for b in batch:
+        _require_lifecycle(b.trace, "execute_many")
+    assert batch[1].stats.shared_exec, "duplicate should share execution"
+    print("[profile-smoke] lifecycle spans present in all three modes "
+          f"(count={res.count}, streamed={n_stream})")
+    print(render_trace(res.trace))
+
+    # ---- 2. disabled-tracing overhead vs same-runner baseline -----------
+    warm_us = _median_warm_us(eng, QUERY)
+    baseline_us = None
+    try:
+        with open(args.baseline) as f:
+            payload = json.load(f)
+        for row in payload.get("rows", []):
+            if row["name"] == "engine_warm_query":
+                baseline_us = float(row["us_per_call"])
+                break
+    except (OSError, ValueError):
+        pass
+    overhead = None
+    ok = True
+    if baseline_us:
+        overhead = warm_us / baseline_us - 1.0
+        ok = overhead <= args.max_overhead
+        print(f"[profile-smoke] warm unprofiled: {warm_us:.1f}us vs "
+              f"baseline {baseline_us:.1f}us -> overhead "
+              f"{overhead * 100:+.1f}% (bound {args.max_overhead * 100:.0f}%"
+              f"{'' if args.enforce else ', report-only'})")
+    else:
+        print(f"[profile-smoke] no engine_warm_query baseline in "
+              f"{args.baseline!r}; measured warm unprofiled "
+              f"{warm_us:.1f}us (overhead check skipped)")
+
+    # profiled cost is informational: profiling is opt-in per query
+    t0 = time.perf_counter()
+    for _ in range(10):
+        eng.execute(QUERY, profile=True)
+    prof_us = (time.perf_counter() - t0) / 10 * 1e6
+    print(f"[profile-smoke] warm profiled: {prof_us:.1f}us "
+          f"({prof_us / warm_us:.2f}x unprofiled)")
+
+    # ---- 3. artifact ----------------------------------------------------
+    artifact = {
+        "schema_version": 1,
+        "trace": res.trace.to_dict(),
+        "warm_unprofiled_us": round(warm_us, 1),
+        "warm_profiled_us": round(prof_us, 1),
+        "baseline_us": baseline_us,
+        "overhead": None if overhead is None else round(overhead, 4),
+        "max_overhead": args.max_overhead,
+        "count": res.count,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[profile-smoke] wrote {args.out}")
+
+    if not ok and args.enforce:
+        print("[profile-smoke] FAIL: disabled-tracing overhead above bound",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,7 @@ from .ordering import get_order
 from .query import PatternQuery
 from .rig import RIG, SimAlgo, build_rig
 from .simulation import EdgeOracle
+from ..obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -117,7 +118,8 @@ class GM:
         self.intervals = intervals
 
     def prepare_rig(self, q: PatternQuery,
-                    options: Optional[GMOptions] = None):
+                    options: Optional[GMOptions] = None,
+                    trace=NULL_TRACER):
         """The matching front half shared by every consumption mode:
         TR + double simulation + RIG expansion + search ordering.
 
@@ -128,27 +130,35 @@ class GM:
             from .reachability import IntervalLabels
             self.intervals = IntervalLabels.build(self.graph)
         t0 = time.perf_counter()
-        if opt.use_transitive_reduction:
-            q = q.transitive_reduction()
-        rig = build_rig(self.graph, q, self.oracle,
-                        sim_algo=opt.sim_algo, sim_passes=opt.sim_passes,
-                        use_prefilter=opt.use_prefilter,
-                        check_method=opt.check_method,
-                        expand_method=opt.expand_method,
-                        intervals=self.intervals)
-        order = (list(range(q.n)) if rig.is_empty()
-                 else get_order(rig, opt.ordering))
+        with trace.span("rig") as sp:
+            if opt.use_transitive_reduction:
+                q = q.transitive_reduction()
+            rig = build_rig(self.graph, q, self.oracle,
+                            sim_algo=opt.sim_algo, sim_passes=opt.sim_passes,
+                            use_prefilter=opt.use_prefilter,
+                            check_method=opt.check_method,
+                            expand_method=opt.expand_method,
+                            intervals=self.intervals, trace=trace)
+            with trace.span("order") as osp:
+                order = (list(range(q.n)) if rig.is_empty()
+                         else get_order(rig, opt.ordering))
+                osp.set(ordering=opt.ordering, order=list(order))
+            if trace.enabled:
+                sp.set(rig_nodes=rig.n_nodes(),
+                       rig_edges=0 if rig.is_empty() else rig.n_edges(),
+                       empty=rig.is_empty())
         return q, rig, order, time.perf_counter() - t0
 
     def match(self, q: PatternQuery,
-              options: Optional[GMOptions] = None) -> MatchResult:
+              options: Optional[GMOptions] = None,
+              trace=NULL_TRACER) -> MatchResult:
         opt = options or self.options
-        q, rig, order, matching_s = self.prepare_rig(q, opt)
+        q, rig, order, matching_s = self.prepare_rig(q, opt, trace=trace)
         t1 = time.perf_counter()
         res: MJoinResult = mjoin(rig, order, limit=opt.limit,
                                  materialize=opt.materialize,
                                  max_tuples=opt.max_tuples,
-                                 method=opt.enum_method)
+                                 method=opt.enum_method, trace=trace)
         t2 = time.perf_counter()
         return MatchResult(
             count=res.count, tuples=res.tuples, order=order,
@@ -164,14 +174,15 @@ class GM:
 
     def match_stream(self, q: PatternQuery,
                      options: Optional[GMOptions] = None,
-                     chunk_size: int = 1024) -> "MatchStream":
+                     chunk_size: int = 1024,
+                     trace=NULL_TRACER) -> "MatchStream":
         """Streaming counterpart of :meth:`match`: the RIG is built eagerly
         (node selection is existence-checking, not enumeration) but the
         MJoin enumeration is lazy — iterate the returned
         :class:`MatchStream` for ``(chunk_size, q.n)`` tuple chunks in the
         same lexicographic order as one-shot matching."""
         opt = options or self.options
-        q, rig, order, matching_s = self.prepare_rig(q, opt)
+        q, rig, order, matching_s = self.prepare_rig(q, opt, trace=trace)
         stream = iter_tuples(rig, order, chunk_size=chunk_size,
                              limit=opt.limit, method=opt.enum_method)
         return MatchStream(query=q, stream=stream, order=order,
@@ -183,7 +194,7 @@ class GM:
 
     def match_batch_frontier(self, queries: List[PatternQuery],
                              options: Optional[List[GMOptions]] = None,
-                             *, intersector=None):
+                             *, intersector=None, traces=None):
         """Counting-mode batch with cross-query micro-batched frontier
         dispatches: every query's RIG is built on the host, then all
         enumerations run under one scheduler that fuses their per-level
@@ -194,9 +205,10 @@ class GM:
         Returns ``(results, dispatches)``; per-query counts equal
         ``match(q, materialize=False)``."""
         opts = options or [self.options] * len(queries)
+        trs = traces or [NULL_TRACER] * len(queries)
         jobs, metas = [], []
-        for q, opt in zip(queries, opts):
-            q, rig, order, matching_s = self.prepare_rig(q, opt)
+        for q, opt, tr in zip(queries, opts, trs):
+            q, rig, order, matching_s = self.prepare_rig(q, opt, trace=tr)
             jobs.append((rig, order, opt.limit))
             metas.append((q, rig, order, matching_s))
         mj, dispatches = mjoin_batched(jobs, intersector=intersector)

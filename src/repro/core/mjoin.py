@@ -43,13 +43,14 @@ from __future__ import annotations
 
 import time
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import bitset
 from .rig import RIG
+from ..obs.trace import NULL_TRACER
 
 DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
 ENUM_METHODS = ("backtrack", "frontier", "frontier-device")
@@ -68,6 +69,12 @@ class MJoinStats:
     method: str = "backtrack"    # strategy that actually ran
     frontier_peak: int = 0       # widest frontier level (frontier methods)
     device_calls: int = 0        # intersect-kernel dispatches (device method)
+    # observability (PR 6): per-level frontier widths (frontier methods,
+    # level 0 = the root candidate set), wall time inside the device
+    # intersector (fenced), and the final local->global materialization.
+    frontier_levels: List[int] = field(default_factory=list)
+    device_s: float = 0.0
+    materialize_s: float = 0.0
 
 
 @dataclass
@@ -218,6 +225,9 @@ def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
 def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
                      materialize: bool, max_tuples: int,
                      stats: MJoinStats) -> Tuple[int, Optional[np.ndarray]]:
+    """Returns ``(count, assign)`` — assign in *local* order-position
+    layout (``None`` when not materializing); the caller converts to
+    query-node order under the materialize phase."""
     mat_cap = max_tuples if materialize else 0
     blocks: List[np.ndarray] = []
     count = 0
@@ -226,12 +236,11 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
         if blk is not None:
             blocks.append(blk)
         count += visited
-    tuples = None
+    assign = None
     if materialize:
         assign = (np.vstack(blocks) if blocks
                   else np.empty((0, rig.query.n), dtype=np.int64))
-        tuples = _to_query_order(assign, order, rig.cand)
-    return count, tuples
+    return count, assign
 
 
 # ----------------------------------------------------------------- frontier
@@ -249,7 +258,9 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
     if intersector is not None:
         rows = np.stack([(rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
                          for (j, ei, isf) in cs], axis=1)    # (f, K, W)
+        t0 = time.perf_counter()
         acc, counts = intersector(rows)
+        stats.device_s += time.perf_counter() - t0
         stats.device_calls += 1
         return acc, counts
     j, ei, isf = cs[0]
@@ -295,6 +306,7 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
     count = 0
     frontier = np.arange(sizes[0], dtype=np.int64)[:, None]   # (F, 1)
     stats.frontier_peak = len(frontier)
+    stats.frontier_levels.append(len(frontier))
     stats.expanded += len(frontier)
 
     if n == 1:
@@ -383,6 +395,7 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
         frontier = (np.vstack(new_parts) if new_parts
                     else np.empty((0, i + 1), dtype=np.int64))
         stats.frontier_peak = max(stats.frontier_peak, len(frontier))
+        stats.frontier_levels.append(len(frontier))
         stats.expanded += len(frontier)
         if len(frontier) == 0:
             return
@@ -402,26 +415,26 @@ def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
         if blk is not None and len(blk):
             blocks.append(blk)
         count += visited
-    tuples = None
+    assign = None
     if materialize:
         assign = (np.vstack(blocks) if blocks
                   else np.empty((0, rig.query.n), dtype=np.int64))
-        tuples = _to_query_order(assign, order, rig.cand)
-    return count, tuples
+    return count, assign
 
 
 # ---------------------------------------------------------------------- API
 def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
           materialize: bool = True, max_tuples: int = 1_000_000,
           method: str = "backtrack",
-          max_frontier: int = 1 << 25) -> MJoinResult:
+          max_frontier: int = 1 << 25, trace=NULL_TRACER) -> MJoinResult:
     """Enumerate (or count) the occurrences encoded by ``rig``.
 
     ``limit`` bounds the number of results visited (None = exhaustive);
     ``max_tuples`` bounds materialization only (counting continues);
     ``method`` picks the enumeration strategy (see module docstring) —
     a frontier level wider than ``max_frontier`` rows falls back to
-    ``backtrack`` to keep memory bounded.
+    ``backtrack`` to keep memory bounded.  ``trace`` records the
+    ``enumerate`` / ``materialize`` phases as spans when profiling.
     """
     if method not in ENUM_METHODS:
         raise ValueError(f"unknown enum method: {method!r} "
@@ -431,33 +444,57 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
     t0 = time.perf_counter()
     stats = MJoinStats(method=method)
 
-    if rig.is_empty():
+    if rig.is_empty() or (limit is not None and limit <= 0):
+        stats.truncated = limit is not None and limit <= 0 \
+            and not rig.is_empty()
         stats.enumerate_s = time.perf_counter() - t0
-        return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
-                           else None, stats, order)
-    if limit is not None and limit <= 0:     # visit budget exhausted upfront
-        stats.truncated = True
-        stats.enumerate_s = time.perf_counter() - t0
+        trace.span("enumerate").__enter__().set(
+            method=method, results=0, empty_rig=rig.is_empty(),
+            truncated=stats.truncated).__exit__(None, None, None)
+        trace.span("materialize").__enter__().set(
+            rows=0).__exit__(None, None, None)
         return MJoinResult(0, np.empty((0, n), dtype=np.int64) if materialize
                            else None, stats, order)
 
     cons = _constraints(q, order)
-    if method == "backtrack":
-        count, tuples = _mjoin_backtrack(rig, order, cons, limit,
-                                         materialize, max_tuples, stats)
-    else:
-        try:
-            count, tuples = _mjoin_frontier(
-                rig, order, cons, limit, materialize, max_tuples, stats,
-                device=(method == "frontier-device"),
-                max_frontier=max_frontier)
-        except FrontierOverflow:
-            stats = MJoinStats(method="backtrack")   # strategy that ran
-            count, tuples = _mjoin_backtrack(rig, order, cons, limit,
+    with trace.span("enumerate") as esp:
+        if method == "backtrack":
+            count, assign = _mjoin_backtrack(rig, order, cons, limit,
                                              materialize, max_tuples, stats)
+        else:
+            try:
+                count, assign = _mjoin_frontier(
+                    rig, order, cons, limit, materialize, max_tuples, stats,
+                    device=(method == "frontier-device"),
+                    max_frontier=max_frontier)
+            except FrontierOverflow:
+                stats = MJoinStats(method="backtrack")   # strategy that ran
+                esp.set(overflow_fallback=True)
+                count, assign = _mjoin_backtrack(rig, order, cons, limit,
+                                                 materialize, max_tuples,
+                                                 stats)
+        if trace.enabled:
+            esp.set(method=stats.method, results=count,
+                    expanded=stats.expanded,
+                    intersections=stats.intersections,
+                    truncated=stats.truncated,
+                    frontier_levels=list(stats.frontier_levels),
+                    frontier_peak=stats.frontier_peak,
+                    device_calls=stats.device_calls,
+                    device_s=stats.device_s)
+
+    tuples = None
+    with trace.span("materialize") as msp:
+        if materialize:
+            t_m = time.perf_counter()
+            tuples = _to_query_order(assign, order, rig.cand)
+            stats.materialize_s = time.perf_counter() - t_m
+        if trace.enabled:
+            msp.set(rows=0 if tuples is None else len(tuples),
+                    materialized=materialize)
 
     stats.results = count
-    stats.enumerate_s = time.perf_counter() - t0
+    stats.enumerate_s = (time.perf_counter() - t0) - stats.materialize_s
     return MJoinResult(count=count, tuples=tuples, stats=stats, order=order)
 
 
@@ -530,6 +567,8 @@ class MJoinStream:
                 stats.intersections = 0
                 stats.frontier_peak = 0
                 stats.device_calls = 0
+                stats.frontier_levels = []
+                stats.device_s = 0.0
             else:
                 yield first[1]
                 for ev in gen:
@@ -729,6 +768,7 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
             dispatches += 1
             for i, (off, f, k, w) in zip(idxs, spans):
                 active[i].active_s += share
+                active[i].stats.device_s += share
                 active[i].reply = (np.ascontiguousarray(acc[off:off + f, :w]),
                                    counts[off:off + f])
     return results, dispatches  # type: ignore[return-value]

@@ -34,6 +34,7 @@ from .query import CHILD, DESC, PatternQuery
 from .reachability import IntervalLabels
 from .simulation import (EdgeOracle, SimResult, fb_sim, fb_sim_bas,
                          match_sets)
+from ..obs.trace import NULL_TRACER
 
 SimAlgo = Literal["bas", "dag", "dagmap", "none"]
 
@@ -127,7 +128,8 @@ def build_rig(graph: DataGraph, q: PatternQuery,
               use_prefilter: bool = False,
               check_method: str = "bitbat",
               expand_method: Literal["bitset", "interval"] = "bitset",
-              intervals: Optional[IntervalLabels] = None) -> RIG:
+              intervals: Optional[IntervalLabels] = None,
+              trace=NULL_TRACER) -> RIG:
     """Algorithm 4.
 
     sim_algo:
@@ -142,27 +144,34 @@ def build_rig(graph: DataGraph, q: PatternQuery,
     # ---- phase (a): node selection
     t0 = time.perf_counter()
     sim: Optional[SimResult] = None
-    if use_prefilter:
-        fb0 = prefilter(graph, q)
-    else:
-        fb0 = match_sets(graph, q)
-    if sim_algo == "none":
-        cos = fb0
-    else:
-        if sim_algo == "bas":
-            sim = fb_sim_bas(graph, q, oracle, max_passes=sim_passes,
-                             method=check_method, fb0=fb0)
-        elif sim_algo == "dag":
-            sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
-                         method=check_method, use_change_flags=False)
-        else:
-            sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
-                         method=check_method, use_change_flags=True)
-        cos = sim.fb
+    with trace.span("select") as sp:
         if use_prefilter:
-            cos = [a & b for a, b in zip(cos, fb0)]
-    n = graph.n
-    cand = [bitset.to_indices(c, n) for c in cos]
+            fb0 = prefilter(graph, q)
+        else:
+            fb0 = match_sets(graph, q)
+        if sim_algo == "none":
+            cos = fb0
+        else:
+            if sim_algo == "bas":
+                sim = fb_sim_bas(graph, q, oracle, max_passes=sim_passes,
+                                 method=check_method, fb0=fb0)
+            elif sim_algo == "dag":
+                sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
+                             method=check_method, use_change_flags=False)
+            else:
+                sim = fb_sim(graph, q, oracle, max_passes=sim_passes,
+                             method=check_method, use_change_flags=True)
+            cos = sim.fb
+            if use_prefilter:
+                cos = [a & b for a, b in zip(cos, fb0)]
+        n = graph.n
+        cand = [bitset.to_indices(c, n) for c in cos]
+        if trace.enabled:
+            sp.set(sim_algo=sim_algo,
+                   sim_passes=sim.passes if sim else 0,
+                   converged=sim.converged if sim else True,
+                   pruned=sim.pruned if sim else 0,
+                   cand_sizes=[len(c) for c in cand])
     t1 = time.perf_counter()
 
     # ---- phase (b): node expansion — one batched gather + column-compact
@@ -171,6 +180,7 @@ def build_rig(graph: DataGraph, q: PatternQuery,
     # exactly the dst-candidate columns IS the AND against cos(dst)).
     fwd: List[np.ndarray] = []
     bwd: List[np.ndarray] = []
+    expand_sp = trace.span("expand").__enter__()
     for e in q.edges:
         src_idx, dst_idx = cand[e.src], cand[e.dst]
         s_n, d_n = len(src_idx), len(dst_idx)
@@ -199,7 +209,15 @@ def build_rig(graph: DataGraph, q: PatternQuery,
             f = bitset.gather_columns(mat, src_idx, dst_idx, n)
         fwd.append(f)
         bwd.append(bitset.transpose(f, d_n))
+    rig = RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd, sim=sim)
+    if trace.enabled:      # per-edge RIG edge counts cost a popcount each
+        expand_sp.set(expand_method=expand_method,
+                      edge_counts=[rig.edge_count(e)
+                                   for e in range(len(fwd))],
+                      rig_nodes=rig.n_nodes())
+    expand_sp.__exit__(None, None, None)
     t2 = time.perf_counter()
 
-    return RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd,
-               sim=sim, build_select_s=t1 - t0, build_expand_s=t2 - t1)
+    rig.build_select_s = t1 - t0
+    rig.build_expand_s = t2 - t1
+    return rig

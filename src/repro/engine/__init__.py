@@ -2,8 +2,12 @@
 # textual hybrid-pattern query language (parser + pretty-printer), a
 # statistics-driven planner choosing backend / simulation algorithm / check
 # method per query, and an Engine facade with cross-query caches (per-graph
-# reachability/interval labels, LRU plan + RIG-stats cache) and batched
-# execution.
+# reachability/interval labels, LRU plan + RIG-stats cache), batched
+# execution, and observability (per-query span traces via
+# ``execute(..., profile=True)``, a per-engine metrics registry, and
+# ``explain()`` plan trees — see ``repro.obs``).
+from ..obs import (MetricsRegistry, Span, Tracer, prometheus_text,
+                   render_trace, trace_to_json)
 from .cache import GraphContext, LRUCache
 from .canonical import canonical_form, canonical_key
 from .engine import (Engine, EngineOptions, EngineResult, EngineStats,
@@ -18,4 +22,6 @@ __all__ = [
     "canonical_form", "canonical_key",
     "Plan", "Planner", "DeviceCaps",
     "GraphStats", "RigStats", "GraphContext", "LRUCache",
+    "Span", "Tracer", "MetricsRegistry",
+    "render_trace", "trace_to_json", "prometheus_text",
 ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Hashable, Optional
+from typing import Any, Hashable, List, Optional, Tuple
 
 from ..core.graph import DataGraph
 from ..core.reachability import IntervalLabels
@@ -32,22 +32,44 @@ __all__ = ["LRUCache", "GraphContext"]
 
 
 class LRUCache:
-    """Bounded least-recently-used map with hit/miss/eviction counters."""
+    """Bounded least-recently-used map with hit/miss/eviction counters.
 
-    def __init__(self, capacity: int = 256):
+    Counters are plain ints by default; ``bind_metrics(registry, name)``
+    additionally mirrors them onto registry counters
+    (``cache_hits{cache=name}`` etc.) so engine-wide snapshots see them —
+    the ints stay authoritative for existing callers."""
+
+    def __init__(self, capacity: int = 256, *, metrics=None,
+                 name: str = ""):
         assert capacity > 0
         self.capacity = capacity
         self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._c_hits = self._c_misses = self._c_evictions = None
+        if metrics is not None:
+            self.bind_metrics(metrics, name or "lru")
+
+    def bind_metrics(self, registry, name: str) -> "LRUCache":
+        self._c_hits = registry.counter("cache_hits", cache=name)
+        self._c_misses = registry.counter("cache_misses", cache=name)
+        self._c_evictions = registry.counter("cache_evictions", cache=name)
+        self._c_hits.value = self.hits
+        self._c_misses.value = self.misses
+        self._c_evictions.value = self.evictions
+        return self
 
     def get(self, key: Hashable, default: Any = None) -> Any:
         if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
+            if self._c_hits is not None:
+                self._c_hits.inc()
             return self._d[key]
         self.misses += 1
+        if self._c_misses is not None:
+            self._c_misses.inc()
         return default
 
     def put(self, key: Hashable, value: Any) -> None:
@@ -57,6 +79,8 @@ class LRUCache:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.evictions += 1
+            if self._c_evictions is not None:
+                self._c_evictions.inc()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -90,6 +114,10 @@ class GraphContext:
     intervals: Optional[IntervalLabels] = field(default=None, init=False)
     label_builds: int = field(default=0, init=False)
     label_build_s: float = field(default=0.0, init=False)
+    # (phase name, duration_s) for the most recent cold build — lets the
+    # engine attach real child spans to the "labels" span after the fact
+    label_phases: List[Tuple[str, float]] = field(default_factory=list,
+                                                  init=False)
 
     def __post_init__(self) -> None:
         self.stats = GraphStats.collect(self.graph)
@@ -106,9 +134,15 @@ class GraphContext:
         t0 = time.perf_counter()
         self.oracle = EdgeOracle(self.graph)    # builds ReachabilityIndex
         self.oracle._reach.bits_t()             # ancestor rows (backward sim)
+        t1 = time.perf_counter()
         self.graph.adj_bits()
         self.graph.adj_bits_t()
+        t2 = time.perf_counter()
         self.intervals = IntervalLabels.build(self.graph)
+        t3 = time.perf_counter()
+        self.label_phases = [("reachability", t1 - t0),
+                             ("adjacency", t2 - t1),
+                             ("intervals", t3 - t2)]
         self.label_builds += 1
-        self.label_build_s += time.perf_counter() - t0
+        self.label_build_s += t3 - t0
         return False

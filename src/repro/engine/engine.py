@@ -42,6 +42,9 @@ from ..core.graph import DataGraph
 from ..core.matcher import GM, MatchResult, MatchStream
 from ..core.mjoin import DEFAULT_LIMIT, device_intersector
 from ..core.query import PatternQuery
+from ..obs.export import prometheus_text, render_trace
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL_TRACER, Span, Tracer
 from .cache import GraphContext, LRUCache
 from .canonical import canonical_key
 from .language import Vocab, fmt, parse
@@ -130,7 +133,11 @@ class EngineStats:
     chunk_size: int = 0              # planned/requested chunk rows
     # batching (execute_many)
     shared_exec: bool = False        # answered by a duplicate in the batch
-    # engine-wide plan-cache counters, snapshotted when this query finished
+    # engine-wide plan-cache counters, snapshotted atomically at *prepare*
+    # time — i.e. right after this query's own cache access, not when it
+    # finished.  Concurrent streams finalizing out of order therefore see
+    # their own consistent cut instead of whatever the cache holds later.
+    query_id: int = 0
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
     plan_cache_evictions: int = 0
@@ -144,6 +151,7 @@ class EngineResult:
     plan: Plan
     stats: EngineStats
     key: str
+    trace: Optional[Span] = None   # span tree when profile=True, else None
 
 
 class EngineStream:
@@ -165,14 +173,16 @@ class EngineStream:
 
     def __init__(self, engine: "Engine", entry: "_PlanEntry",
                  match: MatchStream, stats: "EngineStats",
-                 query: PatternQuery, key: str):
+                 query: PatternQuery, key: str, tracer=None):
         self.engine = engine
         self.match = match
         self.query = query
         self.plan = entry.plan
         self.key = key
         self.stats = stats
+        self.trace: Optional[Span] = None   # set on finalize when profiled
         self._entry = entry
+        self._tracer = tracer
         self._it = iter(match)
         self._finalized = False
 
@@ -216,6 +226,17 @@ class EngineStream:
         self.stats.exec_s = m.matching_s + m.enumerate_s
         self.engine.counters["stream_queries"] += 1
         self.engine._finish(self.stats, m.count)
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            # enumeration ran lazily across the consumer's iteration — the
+            # span is synthesized from the stream's accumulated timings
+            tr.add("enumerate", duration_s=m.enumerate_s,
+                   method=self.stats.enum_method, results=m.count,
+                   chunks=self.stats.chunks, completed=completed,
+                   truncated=self.stats.truncated)
+            tr.add("materialize", streamed=True, chunks=self.stats.chunks,
+                   chunk_size=self.stats.chunk_size)
+            self.trace = tr.finish()
 
 
 @dataclass
@@ -277,6 +298,75 @@ class _Resident:
         return self._jgm
 
 
+_ENGINE_COUNTERS = (
+    "queries", "host_exec", "device_exec", "overflow_fallbacks",
+    "label_builds", "stream_queries", "shared_exec",
+    "frontier_batches", "frontier_batch_dispatches",
+)
+
+
+class _CounterView:
+    """Dict-compatible facade over the engine's registry-backed counters.
+
+    ``Engine.counters`` predates the metrics registry; existing callers do
+    ``eng.counters["queries"] += 1`` and read it like a dict.  The values
+    now live in :class:`~repro.obs.metrics.Counter` objects (series
+    ``engine_<name>``), so registry snapshots and the Prometheus exporter
+    see them — this view keeps the old surface working on top.
+    """
+
+    def __init__(self, registry: MetricsRegistry, names=_ENGINE_COUNTERS,
+                 prefix: str = "engine_"):
+        self._registry = registry
+        self._prefix = prefix
+        self._c = {n: registry.counter(prefix + n) for n in names}
+
+    def _counter(self, key: str):
+        c = self._c.get(key)
+        if c is None:
+            c = self._c[key] = self._registry.counter(self._prefix + key)
+        return c
+
+    def __getitem__(self, key: str) -> int:
+        return self._c[key].value
+
+    def __setitem__(self, key: str, value: int) -> None:
+        self._counter(key).value = int(value)
+
+    def __contains__(self, key) -> bool:
+        return key in self._c
+
+    def __iter__(self):
+        return iter(self._c)
+
+    def __len__(self) -> int:
+        return len(self._c)
+
+    def keys(self):
+        return self._c.keys()
+
+    def values(self):
+        return [c.value for c in self._c.values()]
+
+    def items(self):
+        return [(k, c.value) for k, c in self._c.items()]
+
+    def get(self, key: str, default=None):
+        c = self._c.get(key)
+        return default if c is None else c.value
+
+    def copy(self) -> Dict[str, int]:
+        return dict(self.items())
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, dict):
+            return dict(self.items()) == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return repr(dict(self.items()))
+
+
 class Engine:
     """Query engine bound to one (or a few) resident data graphs."""
 
@@ -285,18 +375,30 @@ class Engine:
                  label_names=None):
         self.options = options or EngineOptions()
         self._residents: "OrderedDict[int, _Resident]" = OrderedDict()
+        # per-engine metrics registry: counters/caches/histograms below all
+        # live here, so snapshot()/metrics_text() is one consistent view
+        self.metrics = MetricsRegistry()
         self._plan_cache = LRUCache(self.options.plan_cache_size)
+        self._plan_cache.bind_metrics(self.metrics, "plan")
         # memo: reduced-query structure -> canonical key, so the exact
         # (up to n! permutations) canonicalization runs once per distinct
         # query structure, not on every plan-cache hit
         self._canon_memo = LRUCache(4 * self.options.plan_cache_size)
+        self._canon_memo.bind_metrics(self.metrics, "canon")
         self.default_graph = graph
-        self.counters: Dict[str, int] = {
-            "queries": 0, "host_exec": 0, "device_exec": 0,
-            "overflow_fallbacks": 0, "label_builds": 0,
-            "stream_queries": 0, "shared_exec": 0,
-            "frontier_batches": 0, "frontier_batch_dispatches": 0,
-        }
+        self.counters = _CounterView(self.metrics)
+        self._qid = itertools.count(1)
+        # histogram objects held directly: the hot path must not pay a
+        # registry lookup per observation
+        h = self.metrics.histogram
+        self._h_parse = h("query_phase_seconds", phase="parse")
+        self._h_plan = h("query_phase_seconds", phase="plan")
+        self._h_exec = h("query_phase_seconds", phase="exec")
+        self._h_total = h("query_phase_seconds", phase="total")
+        self._h_rig_nodes = h("rig_nodes")
+        self._h_rig_edges = h("rig_edges")
+        self._h_sim_passes = h("sim_passes")
+        self._h_results = h("result_count")
         if graph is not None:
             self.register(graph, label_names=label_names)
 
@@ -356,40 +458,89 @@ class Engine:
 
     # ------------------------------------------------------------- planning
     def _prepare(self, query: QueryLike, res: _Resident,
-                 stats: EngineStats):
+                 stats: EngineStats, trace=NULL_TRACER):
         """parse (if text) + TR + canonical key + plan-cache lookup."""
+        stats.query_id = next(self._qid)
         t0 = time.perf_counter()
-        q = (parse(query, vocab=res.vocab) if isinstance(query, str)
-             else query)
+        with trace.span("parse") as psp:
+            q = (parse(query, vocab=res.vocab) if isinstance(query, str)
+                 else query)
+            if trace.enabled:
+                psp.set(text=isinstance(query, str), n=q.n,
+                        edges=len(q.edges))
         stats.parse_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        qr = q.transitive_reduction()
-        raw = (tuple(qr.labels),
-               tuple((e.src, e.dst, e.kind) for e in qr.edges))
-        ckey = self._canon_memo.get(raw)
-        if ckey is None:
-            ckey = canonical_key(qr, reduce=False)
-            self._canon_memo.put(raw, ckey)
-        key = (res.epoch, ckey)
-        entry: Optional[_PlanEntry] = self._plan_cache.get(key)
-        if entry is None:
-            entry = _PlanEntry(plan=res.planner.plan(qr))
-            self._plan_cache.put(key, entry)
-        else:
-            stats.plan_cache_hit = True
-            entry.plan = res.planner.refine(entry.plan, qr, entry.rig)
+        with trace.span("canonicalize") as csp:
+            qr = q.transitive_reduction()
+            raw = (tuple(qr.labels),
+                   tuple((e.src, e.dst, e.kind) for e in qr.edges))
+            ckey = self._canon_memo.get(raw)
+            memo_hit = ckey is not None
+            if ckey is None:
+                ckey = canonical_key(qr, reduce=False)
+                self._canon_memo.put(raw, ckey)
+            if trace.enabled:
+                csp.set(key=ckey, memo_hit=memo_hit,
+                        reduced_edges=len(qr.edges))
+        with trace.span("plan") as sp:
+            key = (res.epoch, ckey)
+            entry: Optional[_PlanEntry] = self._plan_cache.get(key)
+            if entry is None:
+                entry = _PlanEntry(plan=res.planner.plan(qr))
+                self._plan_cache.put(key, entry)
+            else:
+                stats.plan_cache_hit = True
+                entry.plan = res.planner.refine(entry.plan, qr, entry.rig)
+            if trace.enabled:
+                p = entry.plan
+                sp.set(cached=stats.plan_cache_hit, backend=p.backend,
+                       enum_method=p.enum_method, ordering=p.ordering,
+                       sim_algo=p.sim_algo, est_cost=p.est_cost,
+                       est_card=p.est_card, reasons=list(p.reasons))
         stats.plan_s = time.perf_counter() - t0
+        # satellite fix: snapshot the engine-wide plan-cache counters *now*,
+        # right after this query's own cache access — streams finalizing
+        # later must not see other queries' interleaved accesses
+        stats.plan_cache_hits = self._plan_cache.hits
+        stats.plan_cache_misses = self._plan_cache.misses
+        stats.plan_cache_evictions = self._plan_cache.evictions
         return qr, key[1], entry
 
     def explain(self, query: QueryLike,
                 graph: Optional[DataGraph] = None) -> str:
-        """The plan the engine would run, as text (does not execute)."""
+        """The plan the engine would run, as a static lifecycle tree (does
+        not execute).  Output is stable across repeat calls once the plan
+        is cached (the first call may plan fresh; later calls refine
+        against the same observed statistics and print identically)."""
         res = self._resident(graph)
         stats = EngineStats()
         qr, key, entry = self._prepare(query, res, stats)
+        p = entry.plan
         cached = "cached" if stats.plan_cache_hit else "fresh"
-        return f"{key} -> {entry.plan.explain()} ({cached})"
+        lines = [
+            f"query {key}  [{cached} plan]",
+            f"├─ parse        nodes={qr.n} edges={len(qr.edges)}",
+            f"├─ plan         backend={p.backend} enum={p.enum_method} "
+            f"ordering={p.ordering} sim={p.sim_algo}"
+            f"(passes={p.sim_passes}) check={p.check_method} "
+            f"chunk={p.chunk_size}",
+        ]
+        for r in p.reasons:
+            lines.append(f"│     · {r}")
+        lines.append("├─ labels       "
+                     + ("resident" if res.ctx.labels_ready
+                        else "cold (built on first execute)"))
+        rig_line = (f"├─ rig          est_cost={p.est_cost:.4g} "
+                    f"est_card={p.est_card:.4g}")
+        if entry.rig.observations:
+            rig_line += (f"  observed: nodes={entry.rig.rig_nodes} "
+                         f"edges={entry.rig.rig_edges} "
+                         f"count={entry.rig.count}")
+        lines.append(rig_line)
+        lines.append(f"└─ enumerate    method={p.enum_method} "
+                     f"limit={self.options.limit}")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------ execution
     def _observe_host(self, entry: _PlanEntry, stats: EngineStats,
@@ -408,22 +559,30 @@ class Engine:
                               sim_passes=m.sim_passes,
                               matching_s=m.matching_s,
                               enumerate_s=m.enumerate_s, count=m.count)
+            self._h_rig_nodes.observe(m.rig_nodes)
+            self._h_rig_edges.observe(m.rig_edges)
+            self._h_sim_passes.observe(m.sim_passes)
+            self._h_results.observe(m.count)
         self.counters["host_exec"] += 1
 
     def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
-                  stats: EngineStats, materialize: bool) -> MatchResult:
+                  stats: EngineStats, materialize: bool,
+                  trace=NULL_TRACER) -> MatchResult:
         opts = entry.plan.gm_options(limit=self.options.limit,
                                      materialize=materialize)
-        m = res.gm().match(qr, options=opts)
+        m = res.gm().match(qr, options=opts, trace=trace)
         self._observe_host(entry, stats, m)
         return m
 
     def _post_device(self, res: _Resident, qr: PatternQuery,
                      entry: _PlanEntry, stats: EngineStats, dev,
-                     materialize: bool):
+                     materialize: bool, trace=NULL_TRACER,
+                     dispatch_s: float = 0.0):
         """Common handling of one device result: stats, RIG-stats
         observation, and exact host fallback on capacity overflow.
-        Returns ``(count, tuples)``."""
+        Returns ``(count, tuples)``.  ``dispatch_s`` is this query's share
+        of the device dispatch, used only to synthesize trace spans (the
+        vmapped matcher does not split its phases)."""
         stats.backend = DEVICE
         stats.enum_method = "jaxgm-frontier"    # device matcher's enumerator
         # exact_sim runs the device fixpoint loop, whose pass count is not
@@ -433,14 +592,32 @@ class Engine:
         stats.rig_nodes = int(np.sum(dev.fb_sizes))
         self.counters["device_exec"] += 1
         if dev.overflowed:
-            m = self._run_host(res, qr, entry, stats, materialize)
+            if trace.enabled:
+                trace.add("device_attempt", duration_s=dispatch_s,
+                          overflowed=True, rig_nodes=stats.rig_nodes)
+            # the host re-run records the real rig/enumerate/materialize
+            # spans for this query
+            m = self._run_host(res, qr, entry, stats, materialize,
+                               trace=trace)
             stats.backend = DEVICE          # device ran; host completed
             stats.overflow_fallback = True
             self.counters["overflow_fallbacks"] += 1
             return m.count, m.tuples
+        if trace.enabled:
+            # the vmapped matcher fuses selection and enumeration into one
+            # dispatch: the rig/materialize spans are structural markers,
+            # the measured share lands on enumerate
+            trace.add("rig", device=True, rig_nodes=stats.rig_nodes,
+                      fb_sizes=[int(x) for x in dev.fb_sizes])
+            trace.add("enumerate", duration_s=dispatch_s,
+                      method="jaxgm-frontier", results=int(dev.count))
+            trace.add("materialize",
+                      materialized=dev.tuples is not None)
         entry.rig.observe(rig_nodes=stats.rig_nodes, rig_edges=0,
                           sim_passes=stats.sim_passes,
                           matching_s=0.0, enumerate_s=0.0, count=dev.count)
+        self._h_rig_nodes.observe(stats.rig_nodes)
+        self._h_results.observe(dev.count)
         return dev.count, dev.tuples
 
     def _finish(self, stats: EngineStats, count: int,
@@ -450,41 +627,65 @@ class Engine:
         stats.count = count
         stats.total_s = (time.perf_counter() - t_start if t_start is not None
                          else stats.parse_s + stats.plan_s + stats.exec_s)
-        stats.plan_cache_hits = self._plan_cache.hits
-        stats.plan_cache_misses = self._plan_cache.misses
-        stats.plan_cache_evictions = self._plan_cache.evictions
+        self._h_parse.observe(stats.parse_s)
+        self._h_plan.observe(stats.plan_s)
+        self._h_exec.observe(stats.exec_s)
+        self._h_total.observe(stats.total_s)
         self.counters["queries"] += 1
+
+    def _ensure_labels(self, res: _Resident, stats: EngineStats,
+                       trace=NULL_TRACER) -> None:
+        """Label-cache access with its lifecycle span (per-phase children
+        on a cold build, ``cached=True`` on a hit)."""
+        with trace.span("labels") as lsp:
+            stats.label_cache_hit = res.ctx.ensure_labels()
+            if trace.enabled:
+                lsp.set(cached=stats.label_cache_hit)
+                if not stats.label_cache_hit:
+                    for name, dur in res.ctx.label_phases:
+                        trace.add(name, duration_s=dur)
+        if not stats.label_cache_hit:
+            self.counters["label_builds"] += 1
 
     def execute(self, query: QueryLike, *,
                 graph: Optional[DataGraph] = None,
-                materialize: Optional[bool] = None) -> EngineResult:
-        """Plan and run one query; returns count/tuples + plan + stats."""
+                materialize: Optional[bool] = None,
+                profile: bool = False) -> EngineResult:
+        """Plan and run one query; returns count/tuples + plan + stats.
+        ``profile=True`` additionally records the full lifecycle span tree
+        (parse → canonicalize → plan → labels → rig → enumerate →
+        materialize) on ``result.trace``."""
         t_start = time.perf_counter()
         res = self._resident(graph)
         stats = EngineStats()
+        trace = Tracer("query") if profile else NULL_TRACER
         # parse/plan first: malformed text must not pay a cold label build
-        qr, key, entry = self._prepare(query, res, stats)
-        stats.label_cache_hit = res.ctx.ensure_labels()
-        if not stats.label_cache_hit:
-            self.counters["label_builds"] += 1
+        qr, key, entry = self._prepare(query, res, stats, trace=trace)
+        self._ensure_labels(res, stats, trace=trace)
         mat = self.options.materialize if materialize is None else materialize
 
         t0 = time.perf_counter()
         if entry.plan.backend == DEVICE and res.jgm() is not None:
             dev = res.jgm().match(qr, materialize=mat)
-            count, tuples = self._post_device(res, qr, entry, stats, dev, mat)
+            count, tuples = self._post_device(
+                res, qr, entry, stats, dev, mat, trace=trace,
+                dispatch_s=time.perf_counter() - t0)
         else:
-            m = self._run_host(res, qr, entry, stats, mat)
+            m = self._run_host(res, qr, entry, stats, mat, trace=trace)
             count, tuples = m.count, m.tuples
         stats.exec_s = time.perf_counter() - t0
         self._finish(stats, count, t_start)
+        root = trace.finish()
+        if root is not None:
+            root.set(key=key, backend=stats.backend, count=count)
         return EngineResult(count=count, tuples=tuples, query=qr,
-                            plan=entry.plan, stats=stats, key=key)
+                            plan=entry.plan, stats=stats, key=key,
+                            trace=root)
 
     def execute_stream(self, query: QueryLike, *,
                        graph: Optional[DataGraph] = None,
                        chunk_size: Optional[int] = None,
-                       limit=_UNSET) -> EngineStream:
+                       limit=_UNSET, profile: bool = False) -> EngineStream:
         """Plan one query and enumerate its results *lazily*, in fixed-size
         chunks — the facade over :meth:`GM.match_stream` /
         :func:`repro.core.mjoin.iter_tuples`.
@@ -502,22 +703,23 @@ class Engine:
         """
         res = self._resident(graph)
         stats = EngineStats(streamed=True)
+        trace = Tracer("query") if profile else NULL_TRACER
         # parse/plan first: malformed text must not pay a cold label build
-        qr, key, entry = self._prepare(query, res, stats)
-        stats.label_cache_hit = res.ctx.ensure_labels()
-        if not stats.label_cache_hit:
-            self.counters["label_builds"] += 1
+        qr, key, entry = self._prepare(query, res, stats, trace=trace)
+        self._ensure_labels(res, stats, trace=trace)
         lim = self.options.limit if limit is _UNSET else limit
         chunk = chunk_size if chunk_size is not None else \
             entry.plan.chunk_size
         stats.chunk_size = chunk
         opts = entry.plan.gm_options(limit=lim, materialize=True)
-        m = res.gm().match_stream(qr, options=opts, chunk_size=chunk)
-        return EngineStream(self, entry, m, stats, qr, key)
+        m = res.gm().match_stream(qr, options=opts, chunk_size=chunk,
+                                  trace=trace)
+        return EngineStream(self, entry, m, stats, qr, key,
+                            tracer=trace if profile else None)
 
     def execute_many(self, queries: Sequence[RequestLike], *,
-                     graph: Optional[DataGraph] = None
-                     ) -> List[EngineResult]:
+                     graph: Optional[DataGraph] = None,
+                     profile: bool = False) -> List[EngineResult]:
         """Batched execution with cross-request sharing.
 
         Each item is query text, a :class:`PatternQuery`, or a
@@ -555,22 +757,41 @@ class Engine:
         prepared = []
         for i, (q, _) in enumerate(items):
             stats = EngineStats()
-            qr, key, entry = self._prepare(q, residents[i], stats)
-            prepared.append((qr, key, entry, stats))
+            trace = Tracer("query") if profile else NULL_TRACER
+            qr, key, entry = self._prepare(q, residents[i], stats,
+                                           trace=trace)
+            prepared.append((qr, key, entry, stats, trace))
         results: List[Optional[EngineResult]] = [None] * len(items)
         for res, idxs in groups.values():
             self._execute_group(res, idxs, prepared, results)
         return results    # type: ignore[return-value]
 
+    def _finish_trace(self, tr, key: str, stats: EngineStats,
+                      count: int) -> Optional[Span]:
+        root = tr.finish()
+        if root is not None:
+            root.set(key=key, backend=stats.backend, count=count)
+        return root
+
     def _execute_group(self, res: _Resident, idxs: List[int],
                        prepared, results) -> None:
         """Run one resident graph's share of an ``execute_many`` batch."""
+        t0 = time.perf_counter()
         label_hit = res.ctx.ensure_labels()
+        build_s = time.perf_counter() - t0
         if not label_hit:
             self.counters["label_builds"] += 1
         for j, i in enumerate(idxs):
             # resident for every query after the first in this group
-            prepared[i][3].label_cache_hit = label_hit or j > 0
+            hit = label_hit or j > 0
+            prepared[i][3].label_cache_hit = hit
+            tr = prepared[i][4]
+            if tr.enabled:
+                sp = tr.add("labels", duration_s=0.0 if hit else build_s,
+                            cached=hit)
+                if not hit:
+                    for name, dur in res.ctx.label_phases:
+                        sp.children.append(Span(name, duration_s=dur))
 
         # dedup by canonical key: the first occurrence executes, the rest
         # are answered from its result (all batch members share the same
@@ -596,18 +817,20 @@ class Engine:
             batch = jgm.match_batch([prepared[i][0] for i in device_idx])
             dt = time.perf_counter() - t0
             for i, dev in zip(device_idx, batch):
-                qr, key, entry, stats = prepared[i]
+                qr, key, entry, stats, tr = prepared[i]
                 t1 = time.perf_counter()
                 count, _ = self._post_device(res, qr, entry, stats, dev,
-                                             materialize=False)
+                                             materialize=False, trace=tr,
+                                             dispatch_s=dt / len(device_idx))
                 # this query's share of the batched dispatch, plus any host
                 # overflow-fallback time it caused individually
                 stats.exec_s = (dt / len(device_idx)
                                 + time.perf_counter() - t1)
                 self._finish(stats, count)
-                results[i] = EngineResult(count=count, tuples=None, query=qr,
-                                          plan=entry.plan, stats=stats,
-                                          key=key)
+                results[i] = EngineResult(
+                    count=count, tuples=None, query=qr, plan=entry.plan,
+                    stats=stats, key=key,
+                    trace=self._finish_trace(tr, key, stats, count))
             device_idx = []
 
         if len(fd_idx) >= 2:
@@ -619,43 +842,57 @@ class Engine:
                 limit=self.options.limit, materialize=False) for i in fd_idx]
             ms, dispatches = res.gm().match_batch_frontier(
                 [prepared[i][0] for i in fd_idx], gm_opts,
-                intersector=device_intersector())
+                intersector=device_intersector(),
+                traces=[prepared[i][4] for i in fd_idx])
             dt = time.perf_counter() - t0
             self.counters["frontier_batches"] += 1
             self.counters["frontier_batch_dispatches"] += dispatches
             for i, m in zip(fd_idx, ms):
-                qr, key, entry, stats = prepared[i]
+                qr, key, entry, stats, tr = prepared[i]
                 self._observe_host(entry, stats, m)
                 stats.exec_s = dt / len(fd_idx)   # share of the fused run
                 self._finish(stats, m.count)
-                results[i] = EngineResult(count=m.count, tuples=None,
-                                          query=qr, plan=entry.plan,
-                                          stats=stats, key=key)
+                if tr.enabled:
+                    # the rig span was recorded live by prepare_rig; the
+                    # enumeration ran inside the fused scheduler, so its
+                    # span is this query's accounted share
+                    tr.add("enumerate", duration_s=m.enumerate_s,
+                           method=m.enum_method, results=m.count,
+                           fused_batch=True, dispatches=dispatches)
+                    tr.add("materialize", materialized=False)
+                results[i] = EngineResult(
+                    count=m.count, tuples=None, query=qr, plan=entry.plan,
+                    stats=stats, key=key,
+                    trace=self._finish_trace(tr, key, stats, m.count))
             fd_idx = []
 
         for i in reps:
             if results[i] is not None:
                 continue
-            qr, key, entry, stats = prepared[i]
+            qr, key, entry, stats, tr = prepared[i]
             t0 = time.perf_counter()
             if i in device_idx and jgm is not None:
                 # singleton device query: non-batched dispatch
                 dev = jgm.match(qr, materialize=False)
-                count, _ = self._post_device(res, qr, entry, stats, dev,
-                                             materialize=False)
+                count, _ = self._post_device(
+                    res, qr, entry, stats, dev, materialize=False, trace=tr,
+                    dispatch_s=time.perf_counter() - t0)
             else:
-                m = self._run_host(res, qr, entry, stats, materialize=False)
+                m = self._run_host(res, qr, entry, stats, materialize=False,
+                                   trace=tr)
                 count = m.count
             stats.exec_s = time.perf_counter() - t0
             self._finish(stats, count)
-            results[i] = EngineResult(count=count, tuples=None, query=qr,
-                                      plan=entry.plan, stats=stats, key=key)
+            results[i] = EngineResult(
+                count=count, tuples=None, query=qr, plan=entry.plan,
+                stats=stats, key=key,
+                trace=self._finish_trace(tr, key, stats, count))
 
         # fan the representatives' answers out to their duplicates
         for rep, dlist in dups.items():
             src = results[rep]
             for i in dlist:
-                qr, key, entry, stats = prepared[i]
+                qr, key, entry, stats, tr = prepared[i]
                 stats.shared_exec = True
                 stats.backend = src.stats.backend
                 stats.sim_passes = src.stats.sim_passes
@@ -666,11 +903,37 @@ class Engine:
                 stats.exec_s = 0.0
                 self.counters["shared_exec"] += 1
                 self._finish(stats, src.count)
-                results[i] = EngineResult(count=src.count, tuples=None,
-                                          query=qr, plan=entry.plan,
-                                          stats=stats, key=key)
+                if tr.enabled:
+                    # answered from the representative's execution — the
+                    # lifecycle phases are structural markers on this copy
+                    # (the labels span was already recorded with the group)
+                    tr.add("rig", shared=True,
+                           rig_nodes=src.stats.rig_nodes)
+                    tr.add("enumerate", shared=True, results=src.count,
+                           method=src.stats.enum_method)
+                    tr.add("materialize", shared=True)
+                results[i] = EngineResult(
+                    count=src.count, tuples=None, query=qr, plan=entry.plan,
+                    stats=stats, key=key,
+                    trace=self._finish_trace(tr, key, stats, src.count))
 
     # ------------------------------------------------------------- insight
+    def metrics_snapshot(self, prefix: Optional[str] = None
+                         ) -> Dict[str, object]:
+        """Atomic point-in-time copy of every engine metric (counters,
+        cache series, phase/size histograms) — see
+        :meth:`repro.obs.metrics.MetricsRegistry.snapshot`."""
+        return self.metrics.snapshot(prefix)
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of the engine registry."""
+        return prometheus_text(self.metrics)
+
+    @staticmethod
+    def render_trace(span: Span, **kw) -> str:
+        """Render a ``result.trace`` span tree for the terminal."""
+        return render_trace(span, **kw)
+
     def cache_info(self) -> Dict[str, int]:
         info = {
             "plan_entries": len(self._plan_cache),

@@ -19,6 +19,7 @@ correct but slow, used by the equivalence tests.
 
 from __future__ import annotations
 
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -53,6 +54,7 @@ class DeviceIntersector:
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
         self.calls = 0
+        self.kernel_s = 0.0       # fenced wall time inside the kernel
 
     def __call__(self, rows_u64: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray]:
@@ -69,8 +71,13 @@ class DeviceIntersector:
                 padded[:f, k:, :w] = np.uint32(0xFFFFFFFF)
             rows = padded
         bw = max(d for d in (512, 256, 128) if wp % d == 0)
+        # fence with block_until_ready so kernel_s is true device time, not
+        # async-dispatch latency (the conversion below would hide the wait)
+        t0 = time.perf_counter()
         and32, counts = intersect_pallas(jnp.asarray(rows), bf=128, bw=bw,
                                          interpret=self.interpret)
+        jax.block_until_ready((and32, counts))
+        self.kernel_s += time.perf_counter() - t0
         self.calls += 1
         and_rows = np.ascontiguousarray(
             np.asarray(and32)[:f, :w]).view(np.uint64)

@@ -17,10 +17,15 @@ Production behaviours:
   planned onto the host GM path;
 * **cross-query caching** — the engine's per-graph label cache means the
   reachability index is built once at server start, and its plan cache
-  means repeat query shapes skip planning.
+  means repeat query shapes skip planning;
+* **observability** — ``profile=True`` records one lifecycle span tree per
+  request (``Request.trace``); server counters live in the engine's
+  metrics registry (``server_*`` series), so ``metrics_text()`` is one
+  Prometheus-style dump covering engine, caches and server.
 
 Usage:
-  python -m repro.launch.serve --n-queries 64 --graph-nodes 2000
+  python -m repro.launch.serve --n-queries 64 --graph-nodes 2000 \
+      [--profile] [--metrics]
 """
 
 from __future__ import annotations
@@ -33,7 +38,11 @@ from typing import Dict, List, Optional, Union
 from ..core.query import PatternQuery
 from ..data.graphs import random_labeled_graph
 from ..data.queries import random_query_from_graph
-from ..engine import Engine, EngineOptions, QueryParseError
+from ..engine import Engine, EngineOptions, QueryParseError, render_trace
+from ..engine.engine import _CounterView
+from ..obs import Span
+
+_SERVER_COUNTERS = ("served", "redispatched", "rejected", "host_fallback")
 
 
 @dataclass
@@ -46,12 +55,14 @@ class Request:
     count: Optional[int] = None
     overflowed: bool = False
     backend: str = ""
+    trace: Optional[Span] = None    # lifecycle span tree (profiling servers)
 
 
 class QueryServer:
     def __init__(self, graph, *, max_q=8, max_e=16, batch_size=16,
                  capacity=4096, deadline_s=30.0, max_attempts=3,
-                 impl="reference", engine: Optional[Engine] = None):
+                 impl="reference", engine: Optional[Engine] = None,
+                 profile: bool = False):
         self.graph = graph
         # device_min_nodes=0: the server is the device-serving driver, so
         # any query that fits the device caps goes through the vmapped
@@ -62,10 +73,18 @@ class QueryServer:
         self.batch_size = batch_size
         self.deadline_s = deadline_s
         self.max_attempts = max_attempts
+        self.profile = profile
         self.journal: Dict[int, Request] = {}
         self.rejected: Dict[int, str] = {}      # rid -> parse error message
-        self.stats = {"served": 0, "redispatched": 0, "rejected": 0,
-                      "host_fallback": 0}
+        # server counters share the engine's registry (series server_*), so
+        # one metrics dump covers the whole serving stack; the dict-style
+        # surface (stats["served"] += 1) is unchanged
+        self.stats = _CounterView(self.engine.metrics,
+                                  names=_SERVER_COUNTERS, prefix="server_")
+
+    def metrics_text(self) -> str:
+        """Prometheus-style dump of engine + cache + server series."""
+        return self.engine.metrics_text()
 
     def submit(self, rid: int, query: Union[str, PatternQuery]) -> bool:
         """Journal a request.  Textual queries are parsed here (admission
@@ -98,7 +117,8 @@ class QueryServer:
             self.stats["redispatched"] += len(batch)
             return 0
         t0 = time.time()
-        results = self.engine.execute_many([r.query for r in batch])
+        results = self.engine.execute_many([r.query for r in batch],
+                                           profile=self.profile)
         dt = time.time() - t0
         if dt > self.deadline_s and len(batch) > 1:
             # straggler batch: split next time.  A deadline miss is a
@@ -113,6 +133,7 @@ class QueryServer:
             r.count = res.count
             r.overflowed = res.stats.overflow_fallback
             r.backend = res.stats.backend
+            r.trace = res.trace
             if res.stats.overflow_fallback:
                 self.stats["host_fallback"] += 1
             r.done = True
@@ -132,11 +153,18 @@ def main() -> None:
     ap.add_argument("--n-queries", type=int, default=32)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", action="store_true",
+                    help="record and print one lifecycle span tree "
+                         "per request")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus-style metrics dump "
+                         "after draining")
     args = ap.parse_args()
 
     graph = random_labeled_graph(args.graph_nodes, avg_degree=3.0,
                                  n_labels=8, seed=args.seed)
-    server = QueryServer(graph, batch_size=args.batch_size)
+    server = QueryServer(graph, batch_size=args.batch_size,
+                         profile=args.profile)
     qtypes = ["C", "H", "D"]
     n = 0
     for i in range(args.n_queries):
@@ -151,6 +179,15 @@ def main() -> None:
           f"({n / max(dt, 1e-9):.1f} qps) stats={server.stats} "
           f"engine={server.engine.cache_info()}")
     print(f"[serve] counts: {counts[:10]}{'...' if len(counts) > 10 else ''}")
+    if args.profile:
+        for rid in sorted(server.journal):
+            r = server.journal[rid]
+            if r.trace is not None:
+                print(f"[serve] --- request {rid} ---")
+                print(render_trace(r.trace))
+    if args.metrics:
+        print("[serve] --- metrics ---")
+        print(server.metrics_text())
 
 
 if __name__ == "__main__":

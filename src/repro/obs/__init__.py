@@ -1,0 +1,17 @@
+# Observability subsystem: hierarchical query-lifecycle span tracing
+# (trace), a process-wide metrics registry with counters / gauges /
+# histograms (metrics), and exporters — JSON trace dumps, Prometheus-style
+# text, and a compact terminal trace tree (export).  The tracer has a
+# zero-allocation no-op path (NULL_TRACER) so instrumented hot paths cost
+# nothing when profiling is off.
+from .export import prometheus_text, render_trace, trace_to_json
+from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry)
+from .trace import NULL_TRACER, NullTracer, Span, Tracer
+
+__all__ = [
+    "Span", "Tracer", "NullTracer", "NULL_TRACER",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "get_registry",
+    "trace_to_json", "render_trace", "prometheus_text",
+]

@@ -1,0 +1,323 @@
+"""Observability tests: span tracer, metrics registry, exporters, and the
+engine's lifecycle traces across all three execution modes."""
+
+from __future__ import annotations
+
+import json
+import tracemalloc
+
+import pytest
+
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+from repro.engine import Engine, EngineOptions
+from repro.obs import (NULL_TRACER, MetricsRegistry, Span, Tracer,
+                       prometheus_text, render_trace, trace_to_json)
+from repro.obs.trace import _NULL_SPAN
+
+LIFECYCLE = {"parse", "canonicalize", "plan", "labels", "rig", "enumerate",
+             "materialize"}
+
+
+# --------------------------------------------------------------- span tracer
+class TestTracer:
+    def test_nesting_structure(self):
+        tr = Tracer("root")
+        with tr.span("a"):
+            with tr.span("b"):
+                tr.add("c", duration_s=0.5)
+            with tr.span("d"):
+                pass
+        root = tr.finish()
+        assert root.name == "root"
+        assert [s.name for s in root.children] == ["a"]
+        a = root.children[0]
+        assert [s.name for s in a.children] == ["b", "d"]
+        assert a.children[0].children[0].name == "c"
+        assert root.phase_names() == ["root", "a", "b", "c", "d"]
+
+    def test_timing_monotonicity(self):
+        tr = Tracer("root")
+        with tr.span("outer") as outer:
+            for _ in range(3):
+                with tr.span("inner"):
+                    sum(range(1000))
+        root = tr.finish()
+        inners = root.find_all("inner")
+        assert len(inners) == 3
+        # each span's duration is non-negative and children nest within
+        # the parent both in time and in total duration
+        for s in root.iter():
+            assert s.duration_s >= 0.0
+            assert s.t0 is not None and s.t1 is not None and s.t1 >= s.t0
+        assert sum(s.duration_s for s in inners) <= outer.duration_s + 1e-9
+        for s in inners:
+            assert s.t0 >= outer.t0 - 1e-9 and s.t1 <= outer.t1 + 1e-9
+        # children are recorded in start order
+        t0s = [s.t0 for s in inners]
+        assert t0s == sorted(t0s)
+
+    def test_synthesized_duration_override(self):
+        tr = Tracer("root")
+        sp = tr.add("phase", duration_s=1.25, foo="bar")
+        assert sp.duration_s == 1.25
+        assert tr.finish().find("phase").attrs["foo"] == "bar"
+
+    def test_attrs_and_serialization(self):
+        import numpy as np
+
+        tr = Tracer("q")
+        with tr.span("s") as sp:
+            sp.set(arr=np.arange(3), scalar=np.int64(7), t=(1, 2))
+        root = tr.finish()
+        d = root.to_dict()
+        s = json.loads(json.dumps(d))     # round-trips as plain JSON
+        assert s["children"][0]["attrs"]["arr"] == [0, 1, 2]
+        assert s["children"][0]["attrs"]["scalar"] == 7
+
+    def test_finish_closes_open_spans(self):
+        tr = Tracer("root")
+        tr.span("left-open").__enter__()
+        root = tr.finish()
+        assert root.find("left-open").t1 is not None
+
+    def test_noop_identity_and_zero_allocation(self):
+        # every call hands back the same singleton...
+        assert NULL_TRACER.span("x") is NULL_TRACER.span("y") is _NULL_SPAN
+        assert NULL_TRACER.add("x") is _NULL_SPAN
+        assert NULL_TRACER.enabled is False
+        with NULL_TRACER.span("x") as sp:
+            assert sp.set(a=1) is sp
+        # ...and the disabled path allocates nothing across many calls
+        def loop():
+            for _ in range(1000):
+                with NULL_TRACER.span("phase") as s:
+                    s.set()
+
+        loop()                                   # warm up caches
+        tracemalloc.start()
+        loop()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert peak < 4096, f"no-op tracer allocated {peak} bytes"
+
+
+# ----------------------------------------------------------------- registry
+class TestMetrics:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        c = reg.counter("hits", cache="plan")
+        c.inc()
+        c.inc(2)
+        assert reg.counter("hits", cache="plan") is c     # get-or-create
+        assert c.value == 3
+        g = reg.gauge("depth")
+        g.set(4.0)
+        g.add(-1.0)
+        assert g.value == 3.0
+        h = reg.histogram("lat")
+        for v in (0.001, 0.01, 0.01, 10.0):
+            h.observe(v)
+        assert h.count == 4 and h.vmin == 0.001 and h.vmax == 10.0
+        assert h.mean == pytest.approx(10.021 / 4)
+
+    def test_kind_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_snapshot_isolation(self):
+        """A snapshot is a frozen copy: later mutations don't leak in, and
+        two registries never share series."""
+        reg = MetricsRegistry()
+        c = reg.counter("n")
+        c.inc(5)
+        snap = reg.snapshot()
+        c.inc(100)
+        assert snap["n"] == 5
+        assert reg.snapshot()["n"] == 105
+        other = MetricsRegistry()
+        other.counter("n").inc(1)
+        assert reg.snapshot()["n"] == 105
+        assert other.snapshot()["n"] == 1
+
+    def test_snapshot_prefix_and_histogram_summary(self):
+        reg = MetricsRegistry()
+        reg.counter("engine_queries").inc(2)
+        reg.histogram("rig_nodes").observe(42)
+        snap = reg.snapshot("engine_")
+        assert snap == {"engine_queries": 2}
+        full = reg.snapshot()
+        assert full["rig_nodes"]["count"] == 1
+        assert full["rig_nodes"]["max"] == 42
+
+    def test_prometheus_text(self):
+        reg = MetricsRegistry()
+        reg.counter("hits", cache="plan").inc(7)
+        reg.histogram("lat", buckets=(0.1, 1.0)).observe(0.05)
+        text = prometheus_text(reg)
+        assert '# TYPE hits counter' in text
+        assert 'hits{cache="plan"} 7' in text
+        assert 'lat_bucket{le="0.1"} 1' in text
+        assert 'lat_bucket{le="+Inf"} 1' in text
+        assert 'lat_count 1' in text
+
+
+# ------------------------------------------------------------ engine traces
+@pytest.fixture(scope="module")
+def engine():
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=6, seed=3)
+    return Engine(g, options=EngineOptions(device_min_nodes=10 ** 9)), g
+
+
+def _query(g, seed=5, n=4):
+    return random_query_from_graph(g, n, qtype="H", seed=seed)
+
+
+class TestEngineTraces:
+    def test_execute_profile_covers_lifecycle(self, engine):
+        eng, g = engine
+        r = eng.execute(_query(g), profile=True)
+        assert r.trace is not None
+        assert LIFECYCLE <= set(r.trace.phase_names())
+        # the rig span carries its real children from build_rig
+        rig = r.trace.find("rig")
+        assert {"select", "expand", "order"} <= {c.name for c in
+                                                 rig.children}
+        en = r.trace.find("enumerate")
+        assert en.attrs["results"] == r.count
+        # rendering and JSON export work on a real trace
+        assert "enumerate" in render_trace(r.trace)
+        payload = json.loads(trace_to_json(r.trace))
+        assert payload["schema_version"] >= 1
+        assert payload["trace"]["name"] == "query"
+
+    def test_execute_unprofiled_has_no_trace(self, engine):
+        eng, g = engine
+        r = eng.execute(_query(g))
+        assert r.trace is None
+
+    def test_stream_profile_covers_lifecycle(self, engine):
+        eng, g = engine
+        ref = eng.execute(_query(g)).count
+        s = eng.execute_stream(_query(g), profile=True, chunk_size=16)
+        assert s.trace is None              # not finalized yet
+        total = sum(len(c) for c in s)
+        assert total == ref
+        assert s.trace is not None
+        names = set(s.trace.phase_names())
+        assert LIFECYCLE <= names
+        en = s.trace.find("enumerate")
+        assert en.attrs["completed"] is True
+        assert en.attrs["chunks"] == s.stats.chunks
+        assert s.trace.find("materialize").attrs["streamed"] is True
+
+    def test_stream_early_close_still_finalizes_trace(self, engine):
+        eng, g = engine
+        s = eng.execute_stream(_query(g), profile=True, chunk_size=4)
+        next(iter(s))
+        s.close()
+        assert s.trace is not None
+        assert s.trace.find("enumerate").attrs["completed"] is False
+
+    def test_execute_many_profile_covers_lifecycle(self, engine):
+        eng, g = engine
+        qs = [_query(g), _query(g), _query(g, seed=6, n=3)]
+        batch = eng.execute_many(qs, profile=True)
+        assert any(b.stats.shared_exec for b in batch)
+        for b in batch:
+            assert b.trace is not None
+            assert LIFECYCLE <= set(b.trace.phase_names()), \
+                (b.stats.shared_exec,
+                 sorted(set(b.trace.phase_names())))
+        # unprofiled batch stays trace-free
+        for b in eng.execute_many(qs):
+            assert b.trace is None
+
+    def test_trace_timing_totals(self, engine):
+        eng, g = engine
+        r = eng.execute(_query(g, seed=9), profile=True)
+        child_sum = sum(c.duration_s for c in r.trace.children)
+        assert child_sum <= r.trace.duration_s + 1e-6
+        assert r.trace.duration_s <= r.stats.total_s + 0.05
+
+
+# ------------------------------------------------------------- engine metrics
+class TestEngineMetrics:
+    def test_counters_view_and_registry_agree(self):
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=7)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        q = _query(g, seed=8, n=3)
+        eng.execute(q)
+        eng.execute(q)
+        assert eng.counters["queries"] == 2
+        snap = eng.metrics_snapshot("engine_")
+        assert snap["engine_queries"] == 2
+        assert snap["engine_host_exec"] == eng.counters["host_exec"]
+        # dict-style surface still works
+        assert dict(eng.counters.items())["queries"] == 2
+        assert "queries" in eng.counters
+        text = eng.metrics_text()
+        assert "engine_queries 2" in text
+        assert 'cache_hits{cache="plan"}' in text
+
+    def test_plan_cache_snapshot_is_per_query_atomic(self):
+        """The per-query plan-cache counters are captured at prepare time:
+        a stream that finalizes *after* later queries ran must report the
+        cache state of its own access, not the later one."""
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=7)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        qa = _query(g, seed=8, n=3)
+        qb = _query(g, seed=9, n=3)
+        eng.execute(qa)                      # miss #1
+        s = eng.execute_stream(qa)           # hit #1, finalized later
+        hits_at_prepare = eng._plan_cache.hits
+        eng.execute(qb)                      # miss #2
+        eng.execute(qb)                      # hit #2
+        eng.execute(qb)                      # hit #3
+        for _ in s:                          # now finalize the stream
+            pass
+        assert s.stats.plan_cache_hits == hits_at_prepare == 1
+        assert s.stats.plan_cache_misses == 1
+        # the later queries see their own (larger) snapshots
+        assert eng.execute(qb).stats.plan_cache_hits == 4
+
+    def test_label_cache_metrics(self):
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=7)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        q = _query(g, seed=8, n=3)
+        r1 = eng.execute(q, profile=True)
+        r2 = eng.execute(q, profile=True)
+        assert not r1.stats.label_cache_hit
+        assert r2.stats.label_cache_hit
+        lab1, lab2 = r1.trace.find("labels"), r2.trace.find("labels")
+        assert {c.name for c in lab1.children} == \
+            {"reachability", "adjacency", "intervals"}
+        assert lab2.children == [] and lab2.attrs["cached"] is True
+
+
+# ------------------------------------------------------------------- explain
+class TestExplain:
+    def test_explain_static_and_stable(self):
+        g = random_labeled_graph(150, avg_degree=2.5, n_labels=5, seed=11)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        q = _query(g, seed=12, n=3)
+        first = eng.explain(q)
+        assert "plan" in first and "enumerate" in first
+        assert eng.counters["queries"] == 0        # explain does not execute
+        # once the plan is cached, repeat calls print identically
+        second, third = eng.explain(q), eng.explain(q)
+        assert second == third
+        assert "[cached plan]" in second
+        # execution doesn't change explain's structure, only observed stats
+        eng.execute(q)
+        after = eng.explain(q)
+        assert "observed:" in after
+        assert eng.explain(q) == after
+
+    def test_explain_text_query(self):
+        g = random_labeled_graph(150, avg_degree=2.5, n_labels=5, seed=11)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        out = eng.explain("(a:L0)-/->(b:L1)")
+        assert "backend=" in out and "├─ parse" in out
