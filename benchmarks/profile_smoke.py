@@ -12,12 +12,19 @@ Three checks, designed to run on every CI push:
    step): the disabled-tracing path must stay within ``--max-overhead``
    (default 5%).  Cross-machine baselines are meaningless for a wall-clock
    bound, so a missing/foreign baseline downgrades the check to a report;
-3. **artifact** — the one-shot trace tree plus the measurements land in a
+3. **governance overhead** — the warm path is re-measured with a generous
+   armed :class:`~repro.robust.Budget` (deadline + memory caps set but
+   never exercised) against the ungoverned path *in the same process*:
+   the cooperative checks (one monotonic read per slab/level) must cost
+   under ``--max-governance-overhead`` (default 3%).  Same-process A/B, so
+   this gate needs no baseline file and always enforces under
+   ``--enforce``;
+4. **artifact** — the one-shot trace tree plus the measurements land in a
    versioned JSON file for upload.
 
   PYTHONPATH=src python -m benchmarks.profile_smoke \
       [--baseline BENCH_engine.json] [--out TRACE_profile_smoke.json] \
-      [--max-overhead 0.05]
+      [--max-overhead 0.05] [--max-governance-overhead 0.03]
 """
 
 from __future__ import annotations
@@ -28,7 +35,7 @@ import sys
 import time
 
 from repro.data.graphs import random_labeled_graph
-from repro.engine import Engine, EngineOptions, render_trace
+from repro.engine import Budget, Engine, EngineOptions, render_trace
 
 LIFECYCLE = {"parse", "canonicalize", "plan", "labels", "rig", "enumerate",
              "materialize"}
@@ -45,7 +52,7 @@ def _require_lifecycle(trace, mode: str) -> None:
     assert not missing, f"{mode}: trace missing lifecycle spans {missing}"
 
 
-def _median_warm_us(eng, query, repeats: int = 40) -> float:
+def _median_warm_us(eng, query, repeats: int = 40, **kw) -> float:
     """Best-of-3 medians of the warm unprofiled path, in microseconds —
     robust against one noisy scheduling window."""
     meds = []
@@ -53,11 +60,29 @@ def _median_warm_us(eng, query, repeats: int = 40) -> float:
         ts = []
         for _ in range(repeats):
             t0 = time.perf_counter()
-            eng.execute(query)
+            eng.execute(query, **kw)
             ts.append(time.perf_counter() - t0)
         ts.sort()
         meds.append(ts[len(ts) // 2])
     return min(meds) * 1e6
+
+
+def _paired_warm_us(eng, query, budget, repeats: int = 60):
+    """Interleaved governed/ungoverned warm medians (microseconds).
+    Alternating call-by-call makes both variants sample the same noise and
+    drift, so the ratio isolates the governance checks themselves."""
+    gov, ungov = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        eng.execute(query, budget=budget)
+        t1 = time.perf_counter()
+        eng.execute(query)
+        t2 = time.perf_counter()
+        gov.append(t1 - t0)
+        ungov.append(t2 - t1)
+    gov.sort()
+    ungov.sort()
+    return gov[len(gov) // 2] * 1e6, ungov[len(ungov) // 2] * 1e6
 
 
 def main() -> int:
@@ -69,6 +94,10 @@ def main() -> int:
     ap.add_argument("--max-overhead", type=float, default=0.05,
                     help="max allowed disabled-tracing warm regression "
                          "vs the baseline (fraction)")
+    ap.add_argument("--max-governance-overhead", type=float, default=0.03,
+                    help="max allowed warm cost of an armed-but-unexercised "
+                         "budget vs the ungoverned path (fraction, "
+                         "same-process A/B)")
     ap.add_argument("--enforce", action="store_true",
                     help="fail (exit 1) when the overhead bound is "
                          "exceeded; default reports only")
@@ -119,6 +148,23 @@ def main() -> int:
               f"{args.baseline!r}; measured warm unprofiled "
               f"{warm_us:.1f}us (overhead check skipped)")
 
+    # ---- 3. governance overhead (same-process A/B) ----------------------
+    # a generous armed budget: every knob set, none ever exercised, so the
+    # measured delta is purely the cooperative checks on the warm path.
+    # The two variants are interleaved call-by-call: separate measurement
+    # blocks are biased by warm-up drift (the process keeps speeding up),
+    # which would be misread as governance cost.
+    governed = Budget(deadline_s=3600.0, max_rig_bytes=1 << 40,
+                      max_frontier_rows=1 << 30, max_slab_bytes=1 << 40)
+    gov_us, ungov_us = _paired_warm_us(eng, QUERY, governed)
+    gov_overhead = gov_us / ungov_us - 1.0
+    gov_ok = gov_overhead <= args.max_governance_overhead
+    print(f"[profile-smoke] warm governed: {gov_us:.1f}us vs ungoverned "
+          f"{ungov_us:.1f}us -> governance overhead "
+          f"{gov_overhead * 100:+.1f}% "
+          f"(bound {args.max_governance_overhead * 100:.0f}%"
+          f"{'' if args.enforce else ', report-only'})")
+
     # profiled cost is informational: profiling is opt-in per query
     t0 = time.perf_counter()
     for _ in range(10):
@@ -127,7 +173,7 @@ def main() -> int:
     print(f"[profile-smoke] warm profiled: {prof_us:.1f}us "
           f"({prof_us / warm_us:.2f}x unprofiled)")
 
-    # ---- 3. artifact ----------------------------------------------------
+    # ---- 4. artifact ----------------------------------------------------
     artifact = {
         "schema_version": 1,
         "trace": res.trace.to_dict(),
@@ -136,6 +182,9 @@ def main() -> int:
         "baseline_us": baseline_us,
         "overhead": None if overhead is None else round(overhead, 4),
         "max_overhead": args.max_overhead,
+        "warm_governed_us": round(gov_us, 1),
+        "governance_overhead": round(gov_overhead, 4),
+        "max_governance_overhead": args.max_governance_overhead,
         "count": res.count,
     }
     with open(args.out, "w") as f:
@@ -143,9 +192,14 @@ def main() -> int:
         f.write("\n")
     print(f"[profile-smoke] wrote {args.out}")
 
-    if not ok and args.enforce:
-        print("[profile-smoke] FAIL: disabled-tracing overhead above bound",
-              file=sys.stderr)
+    failed = []
+    if not ok:
+        failed.append("disabled-tracing overhead above bound")
+    if not gov_ok:
+        failed.append("governance overhead above bound")
+    if failed and args.enforce:
+        for msg in failed:
+            print(f"[profile-smoke] FAIL: {msg}", file=sys.stderr)
         return 1
     return 0
 

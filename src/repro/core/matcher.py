@@ -42,6 +42,11 @@ class GMOptions:
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
     max_tuples: int = 1_000_000
+    # resource governance (PR 7): an *armed* repro.robust.Budget governing
+    # this match (deadline / RIG memory / frontier caps) and the engine's
+    # shared device CircuitBreaker; None = ungoverned (zero overhead)
+    budget: Optional[object] = field(default=None, repr=False, compare=False)
+    breaker: Optional[object] = field(default=None, repr=False, compare=False)
 
 
 @dataclass
@@ -57,6 +62,8 @@ class MatchResult:
     sim_passes: int
     truncated: bool
     enum_method: str = "backtrack"       # strategy that actually ran
+    deadline_exceeded: bool = False      # budget deadline cut enumeration
+    degradations: List[str] = field(default_factory=list)
     rig: Optional[RIG] = field(default=None, repr=False)
 
 
@@ -102,6 +109,14 @@ class MatchStream:
     def enumerate_s(self) -> float:
         return self.stream.stats.enumerate_s
 
+    @property
+    def deadline_exceeded(self) -> bool:
+        return self.stream.stats.deadline_exceeded
+
+    @property
+    def degradations(self) -> List[str]:
+        return self.stream.stats.degradations
+
 
 class GM:
     """Reusable matcher bound to one data graph (shares the reachability
@@ -138,7 +153,8 @@ class GM:
                             use_prefilter=opt.use_prefilter,
                             check_method=opt.check_method,
                             expand_method=opt.expand_method,
-                            intervals=self.intervals, trace=trace)
+                            intervals=self.intervals, trace=trace,
+                            budget=opt.budget)
             with trace.span("order") as osp:
                 order = (list(range(q.n)) if rig.is_empty()
                          else get_order(rig, opt.ordering))
@@ -158,7 +174,8 @@ class GM:
         res: MJoinResult = mjoin(rig, order, limit=opt.limit,
                                  materialize=opt.materialize,
                                  max_tuples=opt.max_tuples,
-                                 method=opt.enum_method, trace=trace)
+                                 method=opt.enum_method, trace=trace,
+                                 budget=opt.budget, breaker=opt.breaker)
         t2 = time.perf_counter()
         return MatchResult(
             count=res.count, tuples=res.tuples, order=order,
@@ -170,6 +187,8 @@ class GM:
             truncated=res.stats.truncated,
             enum_method=(opt.enum_method if rig.is_empty()
                          else res.stats.method),
+            deadline_exceeded=res.stats.deadline_exceeded,
+            degradations=res.stats.degradations,
             rig=rig)
 
     def match_stream(self, q: PatternQuery,
@@ -184,7 +203,8 @@ class GM:
         opt = options or self.options
         q, rig, order, matching_s = self.prepare_rig(q, opt, trace=trace)
         stream = iter_tuples(rig, order, chunk_size=chunk_size,
-                             limit=opt.limit, method=opt.enum_method)
+                             limit=opt.limit, method=opt.enum_method,
+                             budget=opt.budget, breaker=opt.breaker)
         return MatchStream(query=q, stream=stream, order=order,
                            rig_nodes=rig.n_nodes(),
                            rig_edges=0 if rig.is_empty() else rig.n_edges(),
@@ -206,12 +226,18 @@ class GM:
         ``match(q, materialize=False)``."""
         opts = options or [self.options] * len(queries)
         trs = traces or [NULL_TRACER] * len(queries)
-        jobs, metas = [], []
+        jobs, metas, budgets = [], [], []
+        breaker = None
         for q, opt, tr in zip(queries, opts, trs):
             q, rig, order, matching_s = self.prepare_rig(q, opt, trace=tr)
             jobs.append((rig, order, opt.limit))
             metas.append((q, rig, order, matching_s))
-        mj, dispatches = mjoin_batched(jobs, intersector=intersector)
+            budgets.append(opt.budget)
+            breaker = breaker or opt.breaker
+        mj, dispatches = mjoin_batched(
+            jobs, intersector=intersector,
+            budgets=budgets if any(b is not None for b in budgets) else None,
+            breaker=breaker)
         out = []
         for (q, rig, order, matching_s), res in zip(metas, mj):
             out.append(MatchResult(
@@ -222,7 +248,9 @@ class GM:
                 total_s=matching_s + res.stats.enumerate_s,
                 sim_passes=rig.sim.passes if rig.sim else 0,
                 truncated=res.stats.truncated,
-                enum_method=res.stats.method, rig=rig))
+                enum_method=res.stats.method,
+                deadline_exceeded=res.stats.deadline_exceeded,
+                degradations=res.stats.degradations, rig=rig))
         return out, dispatches
 
 

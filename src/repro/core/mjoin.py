@@ -51,12 +51,14 @@ import numpy as np
 from . import bitset
 from .rig import RIG
 from ..obs.trace import NULL_TRACER
+from ..robust.errors import BreakerOpen, DeadlineExceeded, DeviceFailure
 
 DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
 ENUM_METHODS = ("backtrack", "frontier", "frontier-device")
 
 _FRONTIER_SLAB = 8192        # frontier rows per gather slab (memory bound)
 _INF_CAP = 1 << 62           # "materialize everything" sentinel
+_DEADLINE_STEPS = 1024       # backtrack loop iterations between clock reads
 
 
 @dataclass
@@ -75,6 +77,13 @@ class MJoinStats:
     frontier_levels: List[int] = field(default_factory=list)
     device_s: float = 0.0
     materialize_s: float = 0.0
+    # resource governance (PR 7): a budget deadline noticed at a slab/block
+    # boundary stops enumeration cleanly — the counted/yielded prefix is a
+    # valid lexicographic truncation; each degradation-ladder step taken
+    # (device -> host-intersect, full -> chunked slabs, frontier ->
+    # backtrack) is recorded in order.
+    deadline_exceeded: bool = False
+    degradations: List[str] = field(default_factory=list)
 
 
 @dataclass
@@ -141,8 +150,8 @@ def device_intersector():
 
 # ---------------------------------------------------------------- backtrack
 def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
-                      stats: MJoinStats, mat_cap: int,
-                      block: int = 1024) -> Iterator[Tuple[Optional[np.ndarray], int]]:
+                      stats: MJoinStats, mat_cap: int, block: int = 1024,
+                      budget=None) -> Iterator[Tuple[Optional[np.ndarray], int]]:
     """Depth-first enumeration as a lazy block generator.
 
     Yields ``(rows, visited)`` pairs: ``rows`` is an ``(k <= block, n)``
@@ -186,6 +195,10 @@ def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
             return empty
         return bitset.to_indices(acc, sizes[i])
 
+    # cooperative deadline: one clock read per _DEADLINE_STEPS loop
+    # iterations, so a blown budget is noticed within a bounded slice of
+    # work while the un-governed path pays only an int compare
+    steps = 0
     i = 0
     cand_lists[0] = candidates(0)
     cursors[0] = 0
@@ -193,6 +206,14 @@ def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
         if limit is not None and count >= limit:
             stats.truncated = True
             break
+        if budget is not None:
+            steps += 1
+            if steps >= _DEADLINE_STEPS:
+                steps = 0
+                if budget.expired():
+                    stats.deadline_exceeded = True
+                    stats.truncated = True
+                    break
         lst = cand_lists[i]
         c = cursors[i]
         if c >= len(lst):
@@ -224,7 +245,8 @@ def _backtrack_blocks(rig: RIG, order: List[int], cons, limit,
 
 def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
                      materialize: bool, max_tuples: int,
-                     stats: MJoinStats) -> Tuple[int, Optional[np.ndarray]]:
+                     stats: MJoinStats, budget=None
+                     ) -> Tuple[int, Optional[np.ndarray]]:
     """Returns ``(count, assign)`` — assign in *local* order-position
     layout (``None`` when not materializing); the caller converts to
     query-node order under the materialize phase."""
@@ -232,7 +254,7 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
     blocks: List[np.ndarray] = []
     count = 0
     for blk, visited in _backtrack_blocks(rig, order, cons, limit, stats,
-                                          mat_cap):
+                                          mat_cap, budget=budget):
         if blk is not None:
             blocks.append(blk)
         count += visited
@@ -245,7 +267,7 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
 
 # ----------------------------------------------------------------- frontier
 def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
-                    intersector, stats: MJoinStats):
+                    intersector, stats: MJoinStats, breaker=None):
     """Gather the K constraint rows for one frontier slab and AND-reduce.
 
     Returns ``(acc, counts)``: the packed candidate rows (f, W) plus, on
@@ -253,13 +275,30 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
     host path — computed lazily only where needed).  ``cs`` is non-empty
     (K >= 1); each constraint contributes one gathered row per frontier
     entry.
+
+    With a ``breaker``, the device dispatch is governed: transient
+    failures retry inside :meth:`CircuitBreaker.call`, and a dispatch that
+    still fails (or an open breaker, which refuses before touching the
+    device) degrades this slab — and effectively the query — to the fused
+    numpy path, recorded once as the ``host-intersect`` ladder step.
+    Results are identical either way.
     """
     stats.intersections += len(cs) * len(slab)
     if intersector is not None:
         rows = np.stack([(rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
                          for (j, ei, isf) in cs], axis=1)    # (f, K, W)
         t0 = time.perf_counter()
-        acc, counts = intersector(rows)
+        try:
+            if breaker is not None:
+                acc, counts = breaker.call(lambda: intersector(rows))
+            else:
+                acc, counts = intersector(rows)
+        except (DeviceFailure, BreakerOpen):
+            stats.device_s += time.perf_counter() - t0
+            if "host-intersect" not in stats.degradations:
+                stats.degradations.append("host-intersect")
+            acc = np.bitwise_and.reduce(rows, axis=1)
+            return acc, bitset.count_rows(acc)
         stats.device_s += time.perf_counter() - t0
         stats.device_calls += 1
         return acc, counts
@@ -273,7 +312,8 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
 def _frontier_events(rig: RIG, order: List[int], cons, limit,
                      stats: MJoinStats, device: bool, max_frontier: int,
                      mat_cap: int, external: bool = False,
-                     slab_rows: Optional[int] = None):
+                     slab_rows: Optional[int] = None, budget=None,
+                     breaker=None):
     """Level-synchronous frontier enumeration as an event generator.
 
     Yields two event kinds:
@@ -329,7 +369,21 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
         # candidate sets
         srows = slab_rows or max(1, min(_FRONTIER_SLAB,
                                         (1 << 25) // max(n_i, 1)))
+        if budget is not None:
+            # budget-tightened slab height: the gather transient is
+            # K rows of W words per frontier entry — the "smaller chunks"
+            # degradation step
+            cap = budget.slab_cap_rows(
+                max(1, len(cs)) * bitset.n_words(n_i) * 8)
+            if cap is not None and cap < srows:
+                srows = cap
+                if "chunked-slabs" not in stats.degradations:
+                    stats.degradations.append("chunked-slabs")
         for lo in range(0, len(frontier), srows):
+            if budget is not None and budget.expired():
+                stats.deadline_exceeded = True
+                stats.truncated = True
+                return
             slab = frontier[lo:lo + srows]
             counts = None
             if cs:
@@ -342,7 +396,8 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
                     stats.device_calls += 1
                 else:
                     acc, counts = _slab_intersect(rig, cs, slab,
-                                                  intersector, stats)
+                                                  intersector, stats,
+                                                  breaker=breaker)
                 bits = None
             else:                      # disconnected pattern: cartesian
                 acc = None
@@ -403,15 +458,16 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
 
 def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
                     materialize: bool, max_tuples: int, stats: MJoinStats,
-                    device: bool, max_frontier: int
-                    ) -> Tuple[int, Optional[np.ndarray]]:
+                    device: bool, max_frontier: int, budget=None,
+                    breaker=None) -> Tuple[int, Optional[np.ndarray]]:
     mat_cap = 0
     if materialize:
         mat_cap = max_tuples if limit is None else min(max_tuples, limit)
     blocks: List[np.ndarray] = []
     count = 0
     for _, blk, visited in _frontier_events(rig, order, cons, limit, stats,
-                                            device, max_frontier, mat_cap):
+                                            device, max_frontier, mat_cap,
+                                            budget=budget, breaker=breaker):
         if blk is not None and len(blk):
             blocks.append(blk)
         count += visited
@@ -426,7 +482,8 @@ def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
 def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
           materialize: bool = True, max_tuples: int = 1_000_000,
           method: str = "backtrack",
-          max_frontier: int = 1 << 25, trace=NULL_TRACER) -> MJoinResult:
+          max_frontier: int = 1 << 25, trace=NULL_TRACER,
+          budget=None, breaker=None) -> MJoinResult:
     """Enumerate (or count) the occurrences encoded by ``rig``.
 
     ``limit`` bounds the number of results visited (None = exhaustive);
@@ -435,10 +492,20 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
     a frontier level wider than ``max_frontier`` rows falls back to
     ``backtrack`` to keep memory bounded.  ``trace`` records the
     ``enumerate`` / ``materialize`` phases as spans when profiling.
+
+    ``budget`` (an armed :class:`repro.robust.Budget`) adds cooperative
+    governance: its deadline is checked at slab/block boundaries (a blown
+    deadline yields the partial prefix with ``stats.deadline_exceeded``),
+    its ``max_frontier_rows``/``max_slab_bytes`` tighten the frontier
+    bounds (degrading to smaller slabs or backtracking, recorded in
+    ``stats.degradations``).  ``breaker`` governs device dispatches on the
+    ``frontier-device`` path (retry, then host fallback).
     """
     if method not in ENUM_METHODS:
         raise ValueError(f"unknown enum method: {method!r} "
                          f"(expected one of {ENUM_METHODS})")
+    if budget is not None:
+        max_frontier = budget.frontier_cap(max_frontier)
     q = rig.query
     n = q.n
     t0 = time.perf_counter()
@@ -460,19 +527,23 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
     with trace.span("enumerate") as esp:
         if method == "backtrack":
             count, assign = _mjoin_backtrack(rig, order, cons, limit,
-                                             materialize, max_tuples, stats)
+                                             materialize, max_tuples, stats,
+                                             budget=budget)
         else:
             try:
                 count, assign = _mjoin_frontier(
                     rig, order, cons, limit, materialize, max_tuples, stats,
                     device=(method == "frontier-device"),
-                    max_frontier=max_frontier)
+                    max_frontier=max_frontier, budget=budget,
+                    breaker=breaker)
             except FrontierOverflow:
-                stats = MJoinStats(method="backtrack")   # strategy that ran
+                degr = stats.degradations + ["backtrack"]
+                stats = MJoinStats(method="backtrack",   # strategy that ran
+                                   degradations=degr)
                 esp.set(overflow_fallback=True)
                 count, assign = _mjoin_backtrack(rig, order, cons, limit,
                                                  materialize, max_tuples,
-                                                 stats)
+                                                 stats, budget=budget)
         if trace.enabled:
             esp.set(method=stats.method, results=count,
                     expanded=stats.expanded,
@@ -516,7 +587,7 @@ class MJoinStream:
     def __init__(self, rig: RIG, order: List[int], *, chunk_size: int = 1024,
                  limit: Optional[int] = DEFAULT_LIMIT,
                  method: str = "backtrack", max_frontier: int = 1 << 25,
-                 slab_rows: Optional[int] = None):
+                 slab_rows: Optional[int] = None, budget=None, breaker=None):
         if method not in ENUM_METHODS:
             raise ValueError(f"unknown enum method: {method!r} "
                              f"(expected one of {ENUM_METHODS})")
@@ -527,8 +598,11 @@ class MJoinStream:
         self.chunk_size = chunk_size
         self.limit = limit
         self.method = method
-        self.max_frontier = max_frontier
+        self.max_frontier = (max_frontier if budget is None
+                             else budget.frontier_cap(max_frontier))
         self.slab_rows = slab_rows
+        self.budget = budget
+        self.breaker = breaker
         self.stats = MJoinStats(method=method)
         self.count = 0               # tuples yielded so far
         self._it = self._chunks()
@@ -556,27 +630,34 @@ class MJoinStream:
                 self.rig, self.order, cons, self.limit, stats,
                 device=(self.method == "frontier-device"),
                 max_frontier=self.max_frontier, mat_cap=mat_cap,
-                slab_rows=self.slab_rows)
+                slab_rows=self.slab_rows, budget=self.budget,
+                breaker=self.breaker)
             try:
-                first = next(gen)
-            except StopIteration:
-                return
-            except FrontierOverflow:
-                stats.method = "backtrack"
-                stats.expanded = 0
-                stats.intersections = 0
-                stats.frontier_peak = 0
-                stats.device_calls = 0
-                stats.frontier_levels = []
-                stats.device_s = 0.0
-            else:
-                yield first[1]
-                for ev in gen:
-                    yield ev[1]
-                return
+                try:
+                    first = next(gen)
+                except StopIteration:
+                    return
+                except FrontierOverflow:
+                    stats.method = "backtrack"
+                    stats.expanded = 0
+                    stats.intersections = 0
+                    stats.frontier_peak = 0
+                    stats.device_calls = 0
+                    stats.frontier_levels = []
+                    stats.device_s = 0.0
+                    if "backtrack" not in stats.degradations:
+                        stats.degradations.append("backtrack")
+                else:
+                    yield first[1]
+                    for ev in gen:
+                        yield ev[1]
+                    return
+            finally:
+                gen.close()
         for blk, _ in _backtrack_blocks(self.rig, self.order, cons,
                                         self.limit, stats, mat_cap=_INF_CAP,
-                                        block=self.chunk_size):
+                                        block=self.chunk_size,
+                                        budget=self.budget):
             yield blk
 
     def _chunks(self):
@@ -619,6 +700,10 @@ class MJoinStream:
                 t0 = None
                 yield _to_query_order(cat, self.order, self.rig.cand)
                 t0 = time.perf_counter()
+            if (self.budget is not None and stats.deadline_exceeded
+                    and self.budget.raise_on_error):
+                raise DeadlineExceeded(
+                    f"deadline exceeded after {self.count} streamed tuple(s)")
         finally:
             stats.results = self.count
             if t0 is not None:
@@ -628,7 +713,8 @@ class MJoinStream:
 def iter_tuples(rig: RIG, order: List[int], *, chunk_size: int = 1024,
                 limit: Optional[int] = DEFAULT_LIMIT,
                 method: str = "backtrack", max_frontier: int = 1 << 25,
-                slab_rows: Optional[int] = None) -> MJoinStream:
+                slab_rows: Optional[int] = None, budget=None,
+                breaker=None) -> MJoinStream:
     """Streaming counterpart of :func:`mjoin`: a lazy, chunked enumerator.
 
     ``np.vstack(list(iter_tuples(rig, order, chunk_size=k)))`` equals
@@ -636,10 +722,13 @@ def iter_tuples(rig: RIG, order: List[int], *, chunk_size: int = 1024,
     every ``method``; chunks arrive in lexicographic order and enumeration
     work is done on demand (see :class:`MJoinStream`).  ``slab_rows``
     overrides the frontier gather slab height (testing / tuning hook).
+    ``budget`` / ``breaker`` add cooperative governance as in :func:`mjoin`;
+    a blown deadline ends the stream after the partial prefix (raising
+    :class:`DeadlineExceeded` instead when ``budget.raise_on_error``).
     """
     return MJoinStream(rig, order, chunk_size=chunk_size, limit=limit,
                        method=method, max_frontier=max_frontier,
-                       slab_rows=slab_rows)
+                       slab_rows=slab_rows, budget=budget, breaker=breaker)
 
 
 # -------------------------------------------------------- cross-query batch
@@ -689,7 +778,8 @@ class _BatchJob:
 
 
 def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
-                  *, intersector=None, max_frontier: int = 1 << 25
+                  *, intersector=None, max_frontier: int = 1 << 25,
+                  budgets: Optional[Sequence] = None, breaker=None
                   ) -> Tuple[List[MJoinResult], int]:
     """Count several queries' occurrences with *cross-query micro-batched*
     frontier dispatches.
@@ -705,6 +795,15 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
     exactly; a job whose frontier overflows ``max_frontier`` falls back to
     backtracking on its own, without stalling the batch.
 
+    ``budgets`` (parallel to ``jobs``, entries may be None) adds per-job
+    governance: each armed budget's deadline/frontier caps apply to that
+    job only — a blown deadline completes the job with its partial count
+    (``stats.deadline_exceeded``) while the rest of the batch continues.
+    ``breaker`` governs the fused dispatch; when a dispatch fails for good
+    (or the breaker is open) the whole batch degrades to the numpy
+    intersect for the remaining rounds, recorded per job as the
+    ``host-intersect`` ladder step.
+
     Returns ``(results, dispatches)`` — dispatches is the number of fused
     slab calls actually issued (the quantity micro-batching minimizes).
     """
@@ -712,6 +811,10 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
     results: List[Optional[MJoinResult]] = [None] * len(jobs)
     active = {}
     dispatches = 0
+
+    def _budget(idx: int):
+        return budgets[idx] if budgets is not None else None
+
     for idx, (rig, order, limit) in enumerate(jobs):
         stats = MJoinStats(method=method)
         if rig.is_empty() or (limit is not None and limit <= 0):
@@ -719,10 +822,12 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
                 and not rig.is_empty()
             results[idx] = MJoinResult(0, None, stats, order)
             continue
+        b = _budget(idx)
+        mf = max_frontier if b is None else b.frontier_cap(max_frontier)
         cons = _constraints(rig.query, order)
         gen = _frontier_events(rig, order, cons, limit, stats, device=False,
-                               max_frontier=max_frontier, mat_cap=0,
-                               external=True)
+                               max_frontier=mf, mat_cap=0,
+                               external=True, budget=b)
         active[idx] = _BatchJob(gen, stats)
 
     while active:
@@ -746,11 +851,12 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
                 results[idx] = MJoinResult(job.count, None, job.stats, order)
                 del active[idx]
             except FrontierOverflow:
-                stats = MJoinStats(method="backtrack")
+                degr = job.stats.degradations + ["backtrack"]
+                stats = MJoinStats(method="backtrack", degradations=degr)
                 cons = _constraints(rig.query, order)
                 count, _ = _mjoin_backtrack(rig, order, cons, limit,
                                             materialize=False, max_tuples=0,
-                                            stats=stats)
+                                            stats=stats, budget=_budget(idx))
                 stats.results = count
                 stats.enumerate_s = (job.active_s
                                      + time.perf_counter() - t0)
@@ -761,7 +867,21 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
             big, spans = stack_slabs([requests[i] for i in idxs])
             t0 = time.perf_counter()
             if intersector is not None:
-                acc, counts = intersector(big)
+                try:
+                    if breaker is not None:
+                        acc, counts = breaker.call(
+                            lambda: intersector(big))
+                    else:
+                        acc, counts = intersector(big)
+                except (DeviceFailure, BreakerOpen):
+                    # degrade the whole batch for its remaining rounds:
+                    # results are identical, just computed on the host
+                    intersector = None
+                    for i in idxs:
+                        d = active[i].stats.degradations
+                        if "host-intersect" not in d:
+                            d.append("host-intersect")
+                    acc, counts = _host_intersect_block(big)
             else:
                 acc, counts = _host_intersect_block(big)
             share = (time.perf_counter() - t0) / len(idxs)

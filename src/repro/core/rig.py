@@ -35,6 +35,7 @@ from .reachability import IntervalLabels
 from .simulation import (EdgeOracle, SimResult, fb_sim, fb_sim_bas,
                          match_sets)
 from ..obs.trace import NULL_TRACER
+from ..robust import faults
 
 SimAlgo = Literal["bas", "dag", "dagmap", "none"]
 
@@ -129,7 +130,7 @@ def build_rig(graph: DataGraph, q: PatternQuery,
               check_method: str = "bitbat",
               expand_method: Literal["bitset", "interval"] = "bitset",
               intervals: Optional[IntervalLabels] = None,
-              trace=NULL_TRACER) -> RIG:
+              trace=NULL_TRACER, budget=None) -> RIG:
     """Algorithm 4.
 
     sim_algo:
@@ -138,6 +139,13 @@ def build_rig(graph: DataGraph, q: PatternQuery,
       * ``dagmap`` — FBSim (Dag+Δ) + §5.5 convergence optimizations (default)
       * ``none``   — skip double simulation (GM-F variant: prefilter only)
     sim_passes: pass budget (paper fixes N=4); None = exact fixpoint.
+
+    ``budget`` (an armed :class:`repro.robust.Budget`) makes the build a
+    governed phase: the deadline is checked and the materialized adjacency
+    bytes charged against ``max_rig_bytes`` per query edge, raising
+    :class:`DeadlineExceeded` / :class:`ResourceExhausted` *before* the
+    next edge is gathered.  The RIG is never persisted, so an abandoned
+    build costs nothing to recover from — the caller simply recomputes.
     """
     oracle = oracle or EdgeOracle(graph)
 
@@ -181,7 +189,10 @@ def build_rig(graph: DataGraph, q: PatternQuery,
     fwd: List[np.ndarray] = []
     bwd: List[np.ndarray] = []
     expand_sp = trace.span("expand").__enter__()
-    for e in q.edges:
+    for ei, e in enumerate(q.edges):
+        faults.maybe_fail("rig_expand")
+        if budget is not None:
+            budget.check_deadline(f"rig_expand[{ei}]")
         src_idx, dst_idx = cand[e.src], cand[e.dst]
         s_n, d_n = len(src_idx), len(dst_idx)
         if s_n == 0 or d_n == 0:
@@ -207,8 +218,11 @@ def build_rig(graph: DataGraph, q: PatternQuery,
                                                 dst_idx, n)
         else:
             f = bitset.gather_columns(mat, src_idx, dst_idx, n)
+        b = bitset.transpose(f, d_n)
+        if budget is not None:
+            budget.charge_rig(f.nbytes + b.nbytes, f"rig_expand[{ei}]")
         fwd.append(f)
-        bwd.append(bitset.transpose(f, d_n))
+        bwd.append(b)
     rig = RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd, sim=sim)
     if trace.enabled:      # per-edge RIG edge counts cost a popcount each
         expand_sp.set(expand_method=expand_method,

@@ -15,6 +15,9 @@ from .engine import (Engine, EngineOptions, EngineResult, EngineStats,
 from .language import QueryParseError, Vocab, fmt, parse
 from .planner import DeviceCaps, Plan, Planner
 from .stats import GraphStats, RigStats
+from ..robust import (AdmissionError, BreakerOpen, Budget, CircuitBreaker,
+                      DeadlineExceeded, DeviceFailure, InjectedFault,
+                      QueryError, ResourceExhausted, TransientError)
 
 __all__ = [
     "Engine", "EngineOptions", "EngineResult", "EngineStats", "EngineStream",
@@ -24,4 +27,7 @@ __all__ = [
     "GraphStats", "RigStats", "GraphContext", "LRUCache",
     "Span", "Tracer", "MetricsRegistry",
     "render_trace", "trace_to_json", "prometheus_text",
+    "Budget", "CircuitBreaker",
+    "QueryError", "DeadlineExceeded", "ResourceExhausted", "TransientError",
+    "DeviceFailure", "BreakerOpen", "InjectedFault", "AdmissionError",
 ]

@@ -26,6 +26,7 @@ from typing import Any, Hashable, List, Optional, Tuple
 from ..core.graph import DataGraph
 from ..core.reachability import IntervalLabels
 from ..core.simulation import EdgeOracle
+from ..robust import faults
 from .stats import GraphStats
 
 __all__ = ["LRUCache", "GraphContext"]
@@ -128,18 +129,27 @@ class GraphContext:
 
     def ensure_labels(self) -> bool:
         """Build the per-graph label structures once.  Returns ``True`` when
-        they were already resident (a label-cache hit)."""
+        they were already resident (a label-cache hit).
+
+        The build is transactional: nothing is assigned to ``self`` until
+        every structure exists, so a mid-build failure (device fault, the
+        ``label_build`` injection site) leaves the context cleanly cold and
+        the next call rebuilds from scratch — recompute, not repair.
+        """
         if self.labels_ready:
             return True
+        faults.maybe_fail("label_build")
         t0 = time.perf_counter()
-        self.oracle = EdgeOracle(self.graph)    # builds ReachabilityIndex
-        self.oracle._reach.bits_t()             # ancestor rows (backward sim)
+        oracle = EdgeOracle(self.graph)         # builds ReachabilityIndex
+        oracle._reach.bits_t()                  # ancestor rows (backward sim)
         t1 = time.perf_counter()
         self.graph.adj_bits()
         self.graph.adj_bits_t()
         t2 = time.perf_counter()
-        self.intervals = IntervalLabels.build(self.graph)
+        intervals = IntervalLabels.build(self.graph)
         t3 = time.perf_counter()
+        self.oracle = oracle                    # commit point
+        self.intervals = intervals
         self.label_phases = [("reachability", t1 - t0),
                              ("adjacency", t2 - t1),
                              ("intervals", t3 - t2)]

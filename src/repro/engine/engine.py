@@ -45,6 +45,9 @@ from ..core.query import PatternQuery
 from ..obs.export import prometheus_text, render_trace
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_TRACER, Span, Tracer
+from ..robust import Budget, CircuitBreaker
+from ..robust.errors import (BreakerOpen, DeadlineExceeded, DeviceFailure,
+                             QueryError, TransientError)
 from .cache import GraphContext, LRUCache
 from .canonical import canonical_key
 from .language import Vocab, fmt, parse
@@ -93,6 +96,12 @@ class EngineOptions:
     frontier_device: Optional[bool] = None
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
+    # resource governance (PR 7): the default per-query Budget *template*
+    # (armed per execution; None = ungoverned) and the engine's device
+    # circuit breaker (None = a default CircuitBreaker; shared by every
+    # device dispatch this engine issues)
+    budget: Optional[Budget] = None
+    breaker: Optional[CircuitBreaker] = None
 
     def caps(self) -> DeviceCaps:
         fd = self.frontier_device
@@ -127,6 +136,17 @@ class EngineStats:
     rig_edges: int = 0
     truncated: bool = False
     enum_method: str = "backtrack"   # strategy that ran (device: jaxgm's)
+    # resource governance (PR 7): ``status`` is the stable outcome string
+    # ("ok", or the error taxonomy's status — "deadline_exceeded",
+    # "resource_exhausted", "transient", ...); ``partial`` marks a
+    # correctly-truncated prefix result; ``degradations`` the ladder steps
+    # taken (host-intersect / chunked-slabs / backtrack / host) in order;
+    # ``attempts`` counts executions including transient-failure retries.
+    status: str = "ok"
+    partial: bool = False
+    deadline_exceeded: bool = False
+    degradations: List[str] = field(default_factory=list)
+    attempts: int = 1
     # streaming (execute_stream)
     streamed: bool = False
     chunks: int = 0                  # result chunks yielded
@@ -194,6 +214,14 @@ class EngineStream:
             chunk = next(self._it)
         except StopIteration:
             self._finalize(completed=True)
+            raise
+        except BaseException:
+            # satellite fix (PR 7): a mid-iteration failure — an injected
+            # fault, a raise-mode DeadlineExceeded, a consumer-driven
+            # GeneratorExit — must still close the suspended MJoin state
+            # and record stats/metrics exactly once before propagating
+            self.match.close()
+            self._finalize(completed=False)
             raise
         self.stats.chunks += 1
         return chunk
@@ -302,6 +330,9 @@ _ENGINE_COUNTERS = (
     "queries", "host_exec", "device_exec", "overflow_fallbacks",
     "label_builds", "stream_queries", "shared_exec",
     "frontier_batches", "frontier_batch_dispatches",
+    # resource governance (PR 7); engine_device_retries and the
+    # engine_breaker_state gauge are bound by the CircuitBreaker itself
+    "deadline_exceeded", "budget_degradations", "transient_retries",
 )
 
 
@@ -387,6 +418,10 @@ class Engine:
         self._canon_memo.bind_metrics(self.metrics, "canon")
         self.default_graph = graph
         self.counters = _CounterView(self.metrics)
+        # one breaker per engine, shared by every device dispatch and
+        # mirrored into engine_breaker_state / engine_device_retries
+        self.breaker = (self.options.breaker or CircuitBreaker())
+        self.breaker.bind_metrics(self.metrics)
         self._qid = itertools.count(1)
         # histogram objects held directly: the hot path must not pay a
         # registry lookup per observation
@@ -543,6 +578,32 @@ class Engine:
         return "\n".join(lines)
 
     # ------------------------------------------------------------ execution
+    def _arm_budget(self, budget) -> Optional[Budget]:
+        """Resolve a per-call ``budget=`` argument: ``_UNSET`` falls back to
+        the engine-wide template, ``None`` disables governance, anything
+        else is armed fresh (the template itself is never mutated)."""
+        if budget is _UNSET:
+            budget = self.options.budget
+        return None if budget is None else budget.start()
+
+    def _governance(self, stats: EngineStats, m, observe: bool) -> bool:
+        """Fold one match's governance outcome (deadline flag, degradation
+        ladder steps) into per-query stats and the engine counters; returns
+        the possibly-downgraded ``observe`` (a deadline partial must not
+        feed RIG-stats re-planning)."""
+        degr = list(getattr(m, "degradations", ()) or ())
+        for d in degr:
+            if d not in stats.degradations:
+                stats.degradations.append(d)
+                self.counters["budget_degradations"] += 1
+        if getattr(m, "deadline_exceeded", False):
+            stats.deadline_exceeded = True
+            stats.partial = True
+            stats.status = "deadline_exceeded"
+            self.counters["deadline_exceeded"] += 1
+            return False
+        return observe
+
     def _observe_host(self, entry: _PlanEntry, stats: EngineStats,
                       m, observe: bool = True) -> None:
         """Record one host execution (one-shot, streamed, or batched) into
@@ -554,6 +615,7 @@ class Engine:
         stats.rig_edges = m.rig_edges
         stats.truncated = m.truncated
         stats.enum_method = m.enum_method
+        observe = self._governance(stats, m, observe)
         if observe:
             entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
                               sim_passes=m.sim_passes,
@@ -567,17 +629,31 @@ class Engine:
 
     def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
                   stats: EngineStats, materialize: bool,
-                  trace=NULL_TRACER) -> MatchResult:
+                  trace=NULL_TRACER, budget=None) -> MatchResult:
+        """One governed host attempt; transient failures (injected faults,
+        device losses surfacing as :class:`TransientError`) are retried
+        here up to ``budget.max_attempts`` — recompute is the only recovery
+        the RIG needs."""
         opts = entry.plan.gm_options(limit=self.options.limit,
-                                     materialize=materialize)
-        m = res.gm().match(qr, options=opts, trace=trace)
+                                     materialize=materialize,
+                                     budget=budget, breaker=self.breaker)
+        attempts = 1 if budget is None else max(1, budget.max_attempts)
+        for attempt in range(1, attempts + 1):
+            stats.attempts = max(stats.attempts, attempt)
+            try:
+                m = res.gm().match(qr, options=opts, trace=trace)
+                break
+            except TransientError:
+                if attempt >= attempts:
+                    raise
+                self.counters["transient_retries"] += 1
         self._observe_host(entry, stats, m)
         return m
 
     def _post_device(self, res: _Resident, qr: PatternQuery,
                      entry: _PlanEntry, stats: EngineStats, dev,
                      materialize: bool, trace=NULL_TRACER,
-                     dispatch_s: float = 0.0):
+                     dispatch_s: float = 0.0, budget=None):
         """Common handling of one device result: stats, RIG-stats
         observation, and exact host fallback on capacity overflow.
         Returns ``(count, tuples)``.  ``dispatch_s`` is this query's share
@@ -598,7 +674,7 @@ class Engine:
             # the host re-run records the real rig/enumerate/materialize
             # spans for this query
             m = self._run_host(res, qr, entry, stats, materialize,
-                               trace=trace)
+                               trace=trace, budget=budget)
             stats.backend = DEVICE          # device ran; host completed
             stats.overflow_fallback = True
             self.counters["overflow_fallbacks"] += 1
@@ -634,11 +710,22 @@ class Engine:
         self.counters["queries"] += 1
 
     def _ensure_labels(self, res: _Resident, stats: EngineStats,
-                       trace=NULL_TRACER) -> None:
+                       trace=NULL_TRACER, budget=None) -> None:
         """Label-cache access with its lifecycle span (per-phase children
-        on a cold build, ``cached=True`` on a hit)."""
+        on a cold build, ``cached=True`` on a hit).  A transient failure
+        mid-build leaves the context cleanly cold (the build is
+        transactional), so the retry here simply rebuilds."""
+        attempts = 1 if budget is None else max(1, budget.max_attempts)
         with trace.span("labels") as lsp:
-            stats.label_cache_hit = res.ctx.ensure_labels()
+            for attempt in range(1, attempts + 1):
+                stats.attempts = max(stats.attempts, attempt)
+                try:
+                    stats.label_cache_hit = res.ctx.ensure_labels()
+                    break
+                except TransientError:
+                    if attempt >= attempts:
+                        raise
+                    self.counters["transient_retries"] += 1
             if trace.enabled:
                 lsp.set(cached=stats.label_cache_hit)
                 if not stats.label_cache_hit:
@@ -650,34 +737,74 @@ class Engine:
     def execute(self, query: QueryLike, *,
                 graph: Optional[DataGraph] = None,
                 materialize: Optional[bool] = None,
-                profile: bool = False) -> EngineResult:
+                profile: bool = False, budget=_UNSET) -> EngineResult:
         """Plan and run one query; returns count/tuples + plan + stats.
         ``profile=True`` additionally records the full lifecycle span tree
         (parse → canonicalize → plan → labels → rig → enumerate →
-        materialize) on ``result.trace``."""
+        materialize) on ``result.trace``.
+
+        ``budget`` (a :class:`repro.robust.Budget` template; defaults to
+        ``options.budget``, ``None`` = ungoverned) bounds this execution:
+        a deadline blown during enumeration returns the correctly-truncated
+        prefix with ``stats.status == "deadline_exceeded"``; one blown in a
+        non-enumerable phase (labels, RIG build) or a resource cap returns
+        an empty result carrying the typed status — unless
+        ``budget.raise_on_error``, in which case the typed
+        :class:`~repro.robust.QueryError` propagates instead.
+        """
         t_start = time.perf_counter()
         res = self._resident(graph)
         stats = EngineStats()
         trace = Tracer("query") if profile else NULL_TRACER
+        b = self._arm_budget(budget)
         # parse/plan first: malformed text must not pay a cold label build
         qr, key, entry = self._prepare(query, res, stats, trace=trace)
-        self._ensure_labels(res, stats, trace=trace)
         mat = self.options.materialize if materialize is None else materialize
 
         t0 = time.perf_counter()
-        if entry.plan.backend == DEVICE and res.jgm() is not None:
-            dev = res.jgm().match(qr, materialize=mat)
-            count, tuples = self._post_device(
-                res, qr, entry, stats, dev, mat, trace=trace,
-                dispatch_s=time.perf_counter() - t0)
-        else:
-            m = self._run_host(res, qr, entry, stats, mat, trace=trace)
-            count, tuples = m.count, m.tuples
+        count, tuples = 0, None
+        try:
+            self._ensure_labels(res, stats, trace=trace, budget=b)
+            t0 = time.perf_counter()
+            if entry.plan.backend == DEVICE and res.jgm() is not None:
+                try:
+                    dev = self.breaker.call(
+                        lambda: res.jgm().match(qr, materialize=mat),
+                        budget=b)
+                    count, tuples = self._post_device(
+                        res, qr, entry, stats, dev, mat, trace=trace,
+                        dispatch_s=time.perf_counter() - t0, budget=b)
+                except (DeviceFailure, BreakerOpen):
+                    # bottom of the ladder: recompute the query on the host
+                    if "host" not in stats.degradations:
+                        stats.degradations.append("host")
+                        self.counters["budget_degradations"] += 1
+                    m = self._run_host(res, qr, entry, stats, mat,
+                                       trace=trace, budget=b)
+                    count, tuples = m.count, m.tuples
+            else:
+                m = self._run_host(res, qr, entry, stats, mat, trace=trace,
+                                   budget=b)
+                count, tuples = m.count, m.tuples
+            if (b is not None and b.raise_on_error
+                    and stats.deadline_exceeded):
+                raise DeadlineExceeded(
+                    f"deadline exceeded after {count} result(s)")
+        except QueryError as e:
+            if b is not None and b.raise_on_error:
+                raise
+            stats.status = e.status
+            stats.partial = True
+            if isinstance(e, DeadlineExceeded):
+                stats.deadline_exceeded = True
+                self.counters["deadline_exceeded"] += 1
+            tuples = (np.empty((0, qr.n), dtype=np.int64) if mat else None)
         stats.exec_s = time.perf_counter() - t0
         self._finish(stats, count, t_start)
         root = trace.finish()
         if root is not None:
-            root.set(key=key, backend=stats.backend, count=count)
+            root.set(key=key, backend=stats.backend, count=count,
+                     status=stats.status)
         return EngineResult(count=count, tuples=tuples, query=qr,
                             plan=entry.plan, stats=stats, key=key,
                             trace=root)
@@ -685,7 +812,8 @@ class Engine:
     def execute_stream(self, query: QueryLike, *,
                        graph: Optional[DataGraph] = None,
                        chunk_size: Optional[int] = None,
-                       limit=_UNSET, profile: bool = False) -> EngineStream:
+                       limit=_UNSET, profile: bool = False,
+                       budget=_UNSET) -> EngineStream:
         """Plan one query and enumerate its results *lazily*, in fixed-size
         chunks — the facade over :meth:`GM.match_stream` /
         :func:`repro.core.mjoin.iter_tuples`.
@@ -704,22 +832,38 @@ class Engine:
         res = self._resident(graph)
         stats = EngineStats(streamed=True)
         trace = Tracer("query") if profile else NULL_TRACER
+        b = self._arm_budget(budget)
         # parse/plan first: malformed text must not pay a cold label build
         qr, key, entry = self._prepare(query, res, stats, trace=trace)
-        self._ensure_labels(res, stats, trace=trace)
+        self._ensure_labels(res, stats, trace=trace, budget=b)
         lim = self.options.limit if limit is _UNSET else limit
         chunk = chunk_size if chunk_size is not None else \
             entry.plan.chunk_size
         stats.chunk_size = chunk
-        opts = entry.plan.gm_options(limit=lim, materialize=True)
-        m = res.gm().match_stream(qr, options=opts, chunk_size=chunk,
-                                  trace=trace)
+        opts = entry.plan.gm_options(limit=lim, materialize=True,
+                                     budget=b, breaker=self.breaker)
+        # setup (RIG build) is eager: a transient fault here is retried,
+        # a typed QueryError propagates to the caller — there is no stream
+        # to hand back yet.  Once iteration starts, a blown deadline ends
+        # the stream after its partial prefix instead.
+        attempts = 1 if b is None else max(1, b.max_attempts)
+        for attempt in range(1, attempts + 1):
+            stats.attempts = max(stats.attempts, attempt)
+            try:
+                m = res.gm().match_stream(qr, options=opts, chunk_size=chunk,
+                                          trace=trace)
+                break
+            except TransientError:
+                if attempt >= attempts:
+                    raise
+                self.counters["transient_retries"] += 1
         return EngineStream(self, entry, m, stats, qr, key,
                             tracer=trace if profile else None)
 
     def execute_many(self, queries: Sequence[RequestLike], *,
                      graph: Optional[DataGraph] = None,
-                     profile: bool = False) -> List[EngineResult]:
+                     profile: bool = False,
+                     budget=_UNSET) -> List[EngineResult]:
         """Batched execution with cross-request sharing.
 
         Each item is query text, a :class:`PatternQuery`, or a
@@ -753,14 +897,17 @@ class Engine:
             res = self._resident(g)
             groups.setdefault(id(res), (res, []))[1].append(i)
             residents.append(res)
-        # parse/plan the whole batch first (admission control)
+        # parse/plan the whole batch first (admission control); each
+        # request gets its own armed copy of the budget template — one slow
+        # request blowing its deadline must not cancel its batch-mates
         prepared = []
         for i, (q, _) in enumerate(items):
             stats = EngineStats()
             trace = Tracer("query") if profile else NULL_TRACER
             qr, key, entry = self._prepare(q, residents[i], stats,
                                            trace=trace)
-            prepared.append((qr, key, entry, stats, trace))
+            prepared.append((qr, key, entry, stats, trace,
+                             self._arm_budget(budget)))
         results: List[Optional[EngineResult]] = [None] * len(items)
         for res, idxs in groups.values():
             self._execute_group(res, idxs, prepared, results)
@@ -814,24 +961,39 @@ class Engine:
         jgm = res.jgm() if device_idx else None
         if jgm is not None and len(device_idx) >= 2:
             t0 = time.perf_counter()
-            batch = jgm.match_batch([prepared[i][0] for i in device_idx])
-            dt = time.perf_counter() - t0
-            for i, dev in zip(device_idx, batch):
-                qr, key, entry, stats, tr = prepared[i]
-                t1 = time.perf_counter()
-                count, _ = self._post_device(res, qr, entry, stats, dev,
-                                             materialize=False, trace=tr,
-                                             dispatch_s=dt / len(device_idx))
-                # this query's share of the batched dispatch, plus any host
-                # overflow-fallback time it caused individually
-                stats.exec_s = (dt / len(device_idx)
-                                + time.perf_counter() - t1)
-                self._finish(stats, count)
-                results[i] = EngineResult(
-                    count=count, tuples=None, query=qr, plan=entry.plan,
-                    stats=stats, key=key,
-                    trace=self._finish_trace(tr, key, stats, count))
-            device_idx = []
+            try:
+                batch = self.breaker.call(
+                    lambda: jgm.match_batch(
+                        [prepared[i][0] for i in device_idx]))
+            except (DeviceFailure, BreakerOpen):
+                # whole-batch device loss: every member degrades to the
+                # host singles lane below (recompute, not repair)
+                for i in device_idx:
+                    stats = prepared[i][3]
+                    if "host" not in stats.degradations:
+                        stats.degradations.append("host")
+                        self.counters["budget_degradations"] += 1
+                batch = None
+                device_idx = []
+            if batch is not None:
+                dt = time.perf_counter() - t0
+                for i, dev in zip(device_idx, batch):
+                    qr, key, entry, stats, tr, b = prepared[i]
+                    t1 = time.perf_counter()
+                    count, _ = self._post_device(
+                        res, qr, entry, stats, dev,
+                        materialize=False, trace=tr,
+                        dispatch_s=dt / len(device_idx), budget=b)
+                    # this query's share of the batched dispatch, plus any
+                    # host overflow-fallback time it caused individually
+                    stats.exec_s = (dt / len(device_idx)
+                                    + time.perf_counter() - t1)
+                    self._finish(stats, count)
+                    results[i] = EngineResult(
+                        count=count, tuples=None, query=qr, plan=entry.plan,
+                        stats=stats, key=key,
+                        trace=self._finish_trace(tr, key, stats, count))
+                device_idx = []
 
         if len(fd_idx) >= 2:
             # micro-batched frontier lane: one fused (ΣF, K, W) slab per
@@ -839,7 +1001,9 @@ class Engine:
             # kernel when jax is present, fused numpy otherwise)
             t0 = time.perf_counter()
             gm_opts = [prepared[i][2].plan.gm_options(
-                limit=self.options.limit, materialize=False) for i in fd_idx]
+                limit=self.options.limit, materialize=False,
+                budget=prepared[i][5], breaker=self.breaker)
+                for i in fd_idx]
             ms, dispatches = res.gm().match_batch_frontier(
                 [prepared[i][0] for i in fd_idx], gm_opts,
                 intersector=device_intersector(),
@@ -848,7 +1012,7 @@ class Engine:
             self.counters["frontier_batches"] += 1
             self.counters["frontier_batch_dispatches"] += dispatches
             for i, m in zip(fd_idx, ms):
-                qr, key, entry, stats, tr = prepared[i]
+                qr, key, entry, stats, tr, b = prepared[i]
                 self._observe_host(entry, stats, m)
                 stats.exec_s = dt / len(fd_idx)   # share of the fused run
                 self._finish(stats, m.count)
@@ -869,18 +1033,41 @@ class Engine:
         for i in reps:
             if results[i] is not None:
                 continue
-            qr, key, entry, stats, tr = prepared[i]
+            qr, key, entry, stats, tr, b = prepared[i]
             t0 = time.perf_counter()
-            if i in device_idx and jgm is not None:
-                # singleton device query: non-batched dispatch
-                dev = jgm.match(qr, materialize=False)
-                count, _ = self._post_device(
-                    res, qr, entry, stats, dev, materialize=False, trace=tr,
-                    dispatch_s=time.perf_counter() - t0)
-            else:
-                m = self._run_host(res, qr, entry, stats, materialize=False,
-                                   trace=tr)
-                count = m.count
+            try:
+                if i in device_idx and jgm is not None:
+                    # singleton device query: non-batched dispatch
+                    try:
+                        dev = self.breaker.call(
+                            lambda: jgm.match(qr, materialize=False),
+                            budget=b)
+                        count, _ = self._post_device(
+                            res, qr, entry, stats, dev, materialize=False,
+                            trace=tr, dispatch_s=time.perf_counter() - t0,
+                            budget=b)
+                    except (DeviceFailure, BreakerOpen):
+                        if "host" not in stats.degradations:
+                            stats.degradations.append("host")
+                            self.counters["budget_degradations"] += 1
+                        m = self._run_host(res, qr, entry, stats,
+                                           materialize=False, trace=tr,
+                                           budget=b)
+                        count = m.count
+                else:
+                    m = self._run_host(res, qr, entry, stats,
+                                       materialize=False, trace=tr,
+                                       budget=b)
+                    count = m.count
+            except QueryError as e:
+                if b is not None and b.raise_on_error:
+                    raise
+                stats.status = e.status
+                stats.partial = True
+                if isinstance(e, DeadlineExceeded):
+                    stats.deadline_exceeded = True
+                    self.counters["deadline_exceeded"] += 1
+                count = 0
             stats.exec_s = time.perf_counter() - t0
             self._finish(stats, count)
             results[i] = EngineResult(
@@ -892,7 +1079,7 @@ class Engine:
         for rep, dlist in dups.items():
             src = results[rep]
             for i in dlist:
-                qr, key, entry, stats, tr = prepared[i]
+                qr, key, entry, stats, tr, b = prepared[i]
                 stats.shared_exec = True
                 stats.backend = src.stats.backend
                 stats.sim_passes = src.stats.sim_passes
@@ -900,6 +1087,11 @@ class Engine:
                 stats.rig_edges = src.stats.rig_edges
                 stats.truncated = src.stats.truncated
                 stats.enum_method = src.stats.enum_method
+                # shared answers share the representative's outcome too
+                stats.status = src.stats.status
+                stats.partial = src.stats.partial
+                stats.deadline_exceeded = src.stats.deadline_exceeded
+                stats.degradations = list(src.stats.degradations)
                 stats.exec_s = 0.0
                 self.counters["shared_exec"] += 1
                 self._finish(stats, src.count)

@@ -79,15 +79,19 @@ class Plan:
 
     def gm_options(self, *, limit: Optional[int] = DEFAULT_LIMIT,
                    materialize: bool = False,
-                   max_tuples: int = 1_000_000) -> GMOptions:
+                   max_tuples: int = 1_000_000,
+                   budget=None, breaker=None) -> GMOptions:
         """Host-matcher options realizing this plan.  The engine hands the
-        matcher an already-reduced query, so TR is off here."""
+        matcher an already-reduced query, so TR is off here; ``budget`` /
+        ``breaker`` carry the engine's per-query governance down into the
+        matcher (see :mod:`repro.robust`)."""
         return GMOptions(use_transitive_reduction=False,
                          sim_algo=self.sim_algo, sim_passes=self.sim_passes,
                          check_method=self.check_method,
                          ordering=self.ordering,
                          enum_method=self.enum_method, limit=limit,
-                         materialize=materialize, max_tuples=max_tuples)
+                         materialize=materialize, max_tuples=max_tuples,
+                         budget=budget, breaker=breaker)
 
     def explain(self) -> str:
         why = "; ".join(self.reasons) if self.reasons else "defaults"

@@ -7,14 +7,22 @@ fitting queries, host GM for over-wide ones) and answered with counts.
 Production behaviours:
 
 * **request journal** — every request is journaled before dispatch; a worker
-  failure (or deadline miss) re-dispatches from the journal.  The RIG is
-  runtime state (the paper's key property), so recovery is recompute, not
-  state repair;
-* **straggler mitigation** — per-batch deadline; batches that blow the
-  deadline are split and retried (shrinking the frontier capacity);
+  failure (the ``journal_dispatch`` fault site, or an engine-level
+  transient) re-dispatches from the journal.  The RIG is runtime state (the
+  paper's key property), so recovery is recompute, not state repair;
+* **bounded retries** — a request is re-dispatched at most ``max_attempts``
+  times; one that keeps failing goes terminal (``status="failed"``,
+  ``server_failed`` counter) instead of looping forever;
+* **straggler mitigation** — per-batch deadline (monotonic clock); batches
+  that blow the deadline are split and retried;
 * **admission control** — malformed query text is rejected at submit with
-  the parser's error message; over-wide queries are no longer rejected but
-  planned onto the host GM path;
+  the parser's error message; ``queue_limit`` bounds the journal backlog
+  (excess submissions are rejected with an :class:`AdmissionError`
+  message); over-wide queries are not rejected but planned onto the host;
+* **resource governance** — an optional per-request
+  :class:`~repro.robust.Budget` template rides into the engine: deadline
+  partials are served as terminal results (retrying the same budget would
+  blow the same deadline), transient failures are re-dispatched;
 * **cross-query caching** — the engine's per-graph label cache means the
   reachability index is built once at server start, and its plan cache
   means repeat query shapes skip planning;
@@ -25,7 +33,7 @@ Production behaviours:
 
 Usage:
   python -m repro.launch.serve --n-queries 64 --graph-nodes 2000 \
-      [--profile] [--metrics]
+      [--deadline-ms 50] [--profile] [--metrics]
 """
 
 from __future__ import annotations
@@ -41,20 +49,29 @@ from ..data.queries import random_query_from_graph
 from ..engine import Engine, EngineOptions, QueryParseError, render_trace
 from ..engine.engine import _CounterView
 from ..obs import Span
+from ..robust import Budget, InjectedFault, TransientError, faults
 
-_SERVER_COUNTERS = ("served", "redispatched", "rejected", "host_fallback")
+_SERVER_COUNTERS = ("served", "redispatched", "rejected", "failed",
+                    "host_fallback")
+
+# terminal request states (everything else re-enters the pending pool)
+_TERMINAL = ("done", "failed")
 
 
 @dataclass
 class Request:
     rid: int
     query: PatternQuery
-    submitted: float = field(default_factory=time.time)
+    # monotonic, never wall clock: an NTP step must not age the queue
+    submitted: float = field(default_factory=time.monotonic)
     attempts: int = 0
     done: bool = False
+    status: str = "queued"          # queued | done | failed
+    outcome: str = ""               # engine status of the served result
     count: Optional[int] = None
     overflowed: bool = False
     backend: str = ""
+    error: str = ""                 # last failure detail (retries, give-up)
     trace: Optional[Span] = None    # lifecycle span tree (profiling servers)
 
 
@@ -62,7 +79,8 @@ class QueryServer:
     def __init__(self, graph, *, max_q=8, max_e=16, batch_size=16,
                  capacity=4096, deadline_s=30.0, max_attempts=3,
                  impl="reference", engine: Optional[Engine] = None,
-                 profile: bool = False):
+                 profile: bool = False, budget: Optional[Budget] = None,
+                 queue_limit: Optional[int] = None):
         self.graph = graph
         # device_min_nodes=0: the server is the device-serving driver, so
         # any query that fits the device caps goes through the vmapped
@@ -74,8 +92,10 @@ class QueryServer:
         self.deadline_s = deadline_s
         self.max_attempts = max_attempts
         self.profile = profile
+        self.budget = budget            # per-request template (armed by the
+        self.queue_limit = queue_limit  # engine for each batch member)
         self.journal: Dict[int, Request] = {}
-        self.rejected: Dict[int, str] = {}      # rid -> parse error message
+        self.rejected: Dict[int, str] = {}      # rid -> rejection message
         # server counters share the engine's registry (series server_*), so
         # one metrics dump covers the whole serving stack; the dict-style
         # surface (stats["served"] += 1) is unchanged
@@ -87,10 +107,16 @@ class QueryServer:
         return self.engine.metrics_text()
 
     def submit(self, rid: int, query: Union[str, PatternQuery]) -> bool:
-        """Journal a request.  Textual queries are parsed here (admission
-        control): a malformed query is rejected and the caret-annotated
-        parse error recorded in ``self.rejected[rid]``; well-formed queries
-        are always admitted."""
+        """Journal a request.  Admission control happens here: malformed
+        query text is rejected with the caret-annotated parse error, and a
+        full queue (``queue_limit`` pending requests) rejects rather than
+        buffering unboundedly — both recorded in ``self.rejected[rid]``."""
+        if (self.queue_limit is not None
+                and len(self._pending()) >= self.queue_limit):
+            self.rejected[rid] = (f"queue full ({self.queue_limit} pending "
+                                  f"requests); resubmit later")
+            self.stats["rejected"] += 1
+            return False
         if isinstance(query, str):
             try:
                 query = self.engine.parse(query)
@@ -102,12 +128,27 @@ class QueryServer:
         return True
 
     def _pending(self) -> List[Request]:
-        return [r for r in self.journal.values()
-                if not r.done and r.attempts < self.max_attempts]
+        """Live requests, marking give-ups terminal as a side effect: a
+        request whose attempts are spent becomes ``status="failed"``
+        (``server_failed``) instead of circulating forever."""
+        out = []
+        for r in self.journal.values():
+            if r.status in _TERMINAL:
+                continue
+            if r.attempts >= self.max_attempts:
+                r.status = "failed"
+                r.error = (r.error
+                           or f"gave up after {r.attempts} attempt(s)")
+                self.stats["failed"] += 1
+                continue
+            out.append(r)
+        return out
 
     def step(self, fail: bool = False) -> int:
-        """Serve one micro-batch; ``fail=True`` simulates a worker dying
-        mid-batch (requests stay journaled and are re-dispatched)."""
+        """Serve one micro-batch; ``fail=True`` (or a ``journal_dispatch``
+        injected fault) simulates a worker dying mid-batch — the requests
+        stay journaled, the attempt is spent, and the next step
+        re-dispatches them."""
         batch = self._pending()[:self.batch_size]
         if not batch:
             return 0
@@ -116,10 +157,26 @@ class QueryServer:
         if fail:                              # worker loss: nothing returns
             self.stats["redispatched"] += len(batch)
             return 0
-        t0 = time.time()
-        results = self.engine.execute_many([r.query for r in batch],
-                                           profile=self.profile)
-        dt = time.time() - t0
+        try:
+            faults.maybe_fail("journal_dispatch")
+        except InjectedFault as e:            # simulated worker death
+            for r in batch:
+                r.error = str(e)
+            self.stats["redispatched"] += len(batch)
+            return 0
+        t0 = time.monotonic()
+        try:
+            results = self.engine.execute_many(
+                [r.query for r in batch], profile=self.profile,
+                budget=self.budget)
+        except TransientError as e:
+            # an engine-level transient lost the whole batch: requests are
+            # still journaled, so the next step recomputes them
+            for r in batch:
+                r.error = str(e)
+            self.stats["redispatched"] += len(batch)
+            return 0
+        dt = time.monotonic() - t0
         if dt > self.deadline_s and len(batch) > 1:
             # straggler batch: split next time.  A deadline miss is a
             # re-dispatch, not a lost attempt (the results were produced,
@@ -129,22 +186,37 @@ class QueryServer:
             for r in batch:
                 r.attempts -= 1
             return 0
+        served = 0
         for r, res in zip(batch, results):
+            st = res.stats.status
+            if st == "transient":
+                # the engine exhausted its own recompute attempts for this
+                # request; spend a server attempt and try again (or go
+                # terminal once max_attempts is hit)
+                r.error = "transient engine failure"
+                self.stats["redispatched"] += 1
+                continue
+            # everything else — including a deadline partial — is terminal:
+            # re-running the same budget would blow the same deadline
             r.count = res.count
             r.overflowed = res.stats.overflow_fallback
             r.backend = res.stats.backend
+            r.outcome = st
             r.trace = res.trace
             if res.stats.overflow_fallback:
                 self.stats["host_fallback"] += 1
             r.done = True
+            r.status = "done"
             self.stats["served"] += 1
-        return len(batch)
+            served += 1
+        return served
 
     def drain(self, max_rounds: int = 100) -> None:
         for _ in range(max_rounds):
             if not self._pending():
                 break
             self.step()
+        self._pending()       # final sweep: mark any give-ups terminal
 
 
 def main() -> None:
@@ -153,6 +225,8 @@ def main() -> None:
     ap.add_argument("--n-queries", type=int, default=32)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request budget deadline in ms (0 = none)")
     ap.add_argument("--profile", action="store_true",
                     help="record and print one lifecycle span tree "
                          "per request")
@@ -163,17 +237,19 @@ def main() -> None:
 
     graph = random_labeled_graph(args.graph_nodes, avg_degree=3.0,
                                  n_labels=8, seed=args.seed)
+    budget = (Budget(deadline_s=args.deadline_ms / 1000.0, max_attempts=2)
+              if args.deadline_ms > 0 else None)
     server = QueryServer(graph, batch_size=args.batch_size,
-                         profile=args.profile)
+                         profile=args.profile, budget=budget)
     qtypes = ["C", "H", "D"]
     n = 0
     for i in range(args.n_queries):
         q = random_query_from_graph(graph, 3 + i % 3, qtype=qtypes[i % 3],
                                     seed=args.seed + i)
         n += int(server.submit(i, q))
-    t0 = time.time()
+    t0 = time.monotonic()
     server.drain()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     counts = [server.journal[i].count for i in sorted(server.journal)]
     print(f"[serve] {n} queries in {dt:.2f}s "
           f"({n / max(dt, 1e-9):.1f} qps) stats={server.stats} "

@@ -297,6 +297,68 @@ class TestEngineMetrics:
         assert lab2.children == [] and lab2.attrs["cached"] is True
 
 
+# ------------------------------------------------- governance metrics (PR 7)
+class TestGovernanceMetrics:
+    def test_deadline_and_degradation_counters(self):
+        from repro.engine import Budget
+
+        g = random_labeled_graph(1500, avg_degree=8.0, n_labels=1, seed=1)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9,
+                                              materialize=False,
+                                              force_enum="backtrack",
+                                              limit=None))
+        eng.execute("(a:L0)-/->(b:L0)")          # warm labels
+        snap0 = eng.metrics_snapshot("engine_")
+        assert snap0["engine_deadline_exceeded"] == 0
+        res = eng.execute("(a:L0)-//->(b:L0)-//->(c:L0)",
+                          budget=Budget(deadline_s=0.05))
+        assert res.stats.status == "deadline_exceeded"
+        snap = eng.metrics_snapshot("engine_")
+        assert snap["engine_deadline_exceeded"] == 1
+        assert "engine_budget_degradations" in snap
+        assert "engine_transient_retries" in snap
+        text = eng.metrics_text()
+        assert "engine_deadline_exceeded 1" in text
+
+    def test_breaker_gauge_and_retry_counter(self):
+        from repro.engine import CircuitBreaker
+        from repro.robust import faults
+        from repro.robust.breaker import STATE_VALUES
+
+        g = random_labeled_graph(300, avg_degree=3.0, n_labels=4, seed=2)
+        br = CircuitBreaker(sleep=lambda s: None, failure_threshold=3)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=0,
+                                              materialize=False,
+                                              force_backend="device",
+                                              breaker=br))
+        snap = eng.metrics_snapshot("engine_")
+        assert snap["engine_breaker_state"] == STATE_VALUES["closed"]
+        assert snap["engine_device_retries"] == 0
+        with faults.inject(faults.every("device_dispatch", 1)):
+            eng.execute("(a:L0)-/->(b:L1)")      # host fallback, breaker opens
+        faults.uninstall()
+        snap = eng.metrics_snapshot("engine_")
+        assert snap["engine_breaker_state"] == STATE_VALUES["open"]
+        assert snap["engine_device_retries"] >= 1
+        assert snap["engine_budget_degradations"] >= 1   # the "host" step
+        assert "engine_breaker_state" in eng.metrics_text()
+
+    def test_server_failed_counter(self):
+        from repro.launch.serve import QueryServer
+
+        g = random_labeled_graph(200, avg_degree=3.0, n_labels=4, seed=3)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9,
+                                              materialize=False))
+        srv = QueryServer(g, engine=eng, max_attempts=1)
+        srv.submit(0, "(a:L0)-/->(b:L1)")
+        srv.step(fail=True)                      # the only attempt is lost
+        srv.drain()
+        assert srv.journal[0].status == "failed"
+        snap = eng.metrics_snapshot("server_")
+        assert snap["server_failed"] == 1
+        assert "server_failed 1" in srv.metrics_text()
+
+
 # ------------------------------------------------------------------- explain
 class TestExplain:
     def test_explain_static_and_stable(self):
