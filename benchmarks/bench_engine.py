@@ -121,6 +121,32 @@ def run(quick: bool = True) -> List[Row]:
                      "chunk_size": drained.stats.chunk_size,
                      "oneshot_us": round(full_s * 1e6, 1)}))
 
+    # ---- resident enumerator: device-capable warm execute + stream ------
+    # same graph + query as the streaming section so the host rows above
+    # are the direct baseline; upload happens once per query RIG, paged
+    # pair pages feed the stream (no slab shipping per level)
+    eng_r, _ = _fresh_engine(n, seed=1, materialize=True,
+                             force_enum="frontier-device-resident",
+                             frontier_device=True)
+    eng_r.execute(big)                    # warm labels + plan + jit caches
+    res_s = min(_time_one(eng_r, big) for _ in range(3))
+    r = eng_r.execute(big)
+    t0 = time.perf_counter()
+    drained = eng_r.execute_stream(big)
+    res_total = sum(len(c) for c in drained)
+    res_drain_s = time.perf_counter() - t0
+    assert res_total == full.count        # byte-path equivalence smoke
+    rows.append(Row("engine_resident_warm", res_s * 1e6, {
+        "enum_method": r.stats.enum_method,
+        "resident_uploads": eng_r.counters["resident_uploads"],
+        "resident_dispatches": eng_r.counters["resident_dispatches"],
+        "small_frontier_host_routed":
+            eng_r.counters["small_frontier_host_routed"],
+        "host_warm_us": round(full_s * 1e6, 1)}))
+    rows.append(Row("engine_resident_stream_drain", res_drain_s * 1e6, {
+        "tuples": res_total,
+        "host_drain_us": round(drain_s * 1e6, 1)}))
+
     # ---- micro-batched execute_many vs sequential loop ------------------
     # serving-style warm workload: a few hot query shapes, many requests
     distinct = ["(a:L0)-//->(b:L1)", "(a:L1)-//->(b:L2)",

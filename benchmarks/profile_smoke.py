@@ -19,7 +19,14 @@ Three checks, designed to run on every CI push:
    under ``--max-governance-overhead`` (default 3%).  Same-process A/B, so
    this gate needs no baseline file and always enforces under
    ``--enforce``;
-4. **artifact** — the one-shot trace tree plus the measurements land in a
+4. **device timing attribution** (jax only) — ``DeviceIntersector`` /
+   ``ResidentIntersector`` must book one-time Pallas/XLA compiles to
+   ``compile_s`` and keep ``kernel_s`` as pure fenced per-call device
+   time: a repeat dispatch on an already-compiled shape must not grow
+   ``compile_s``, and per-call ``kernel_s`` must stay far below the
+   shape's compile cost (the regression this guards: the first dispatch
+   used to fold its jit into ``kernel_s`` and poison profiles);
+5. **artifact** — the one-shot trace tree plus the measurements land in a
    versioned JSON file for upload.
 
   PYTHONPATH=src python -m benchmarks.profile_smoke \
@@ -165,6 +172,29 @@ def main() -> int:
           f"(bound {args.max_governance_overhead * 100:.0f}%"
           f"{'' if args.enforce else ', report-only'})")
 
+    # ---- 4. device timing attribution: kernel_s excludes compile --------
+    try:
+        import numpy as np
+
+        from repro.jaxgm.frontier import DeviceIntersector
+    except ImportError:
+        print("[profile-smoke] jax unavailable; device timing attribution "
+              "check skipped")
+    else:
+        di = DeviceIntersector(mode="xla")
+        slab = np.ones((64, 2, 2), dtype=np.uint64)
+        di(slab)                                 # first call: compiles
+        c1, k1 = di.compile_s, di.kernel_s
+        assert c1 > 0, "first dispatch must record its compile"
+        di(slab)                                 # repeat: cached executable
+        k2 = di.kernel_s - k1
+        assert di.compile_s == c1, \
+            "repeat dispatch on a compiled shape must not recompile"
+        assert k2 < c1, \
+            "per-call kernel_s must exclude the shape's compile time"
+        print(f"[profile-smoke] device timing attribution: compile "
+              f"{c1 * 1e3:.1f}ms (once), repeat kernel {k2 * 1e3:.2f}ms")
+
     # profiled cost is informational: profiling is opt-in per query
     t0 = time.perf_counter()
     for _ in range(10):
@@ -173,7 +203,7 @@ def main() -> int:
     print(f"[profile-smoke] warm profiled: {prof_us:.1f}us "
           f"({prof_us / warm_us:.2f}x unprofiled)")
 
-    # ---- 4. artifact ----------------------------------------------------
+    # ---- 5. artifact ----------------------------------------------------
     artifact = {
         "schema_version": 1,
         "trace": res.trace.to_dict(),

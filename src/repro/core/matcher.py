@@ -37,11 +37,15 @@ class GMOptions:
     use_prefilter: bool = False
     check_method: str = "bitbat"         # binsearch | bititer | bitbat
     ordering: str = "jo"                 # jo | ri | bj
-    enum_method: str = "backtrack"       # backtrack | frontier | frontier-device
+    enum_method: str = "backtrack"       # see repro.core.mjoin.ENUM_METHODS
     expand_method: str = "bitset"        # bitset | interval (§5.5 early term.)
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
     max_tuples: int = 1_000_000
+    # device slabs below this many rows are routed through the host
+    # intersect (padded-dispatch floor makes them device-unprofitable);
+    # 0 = off.  The planner sets this for engine-planned device queries.
+    small_frontier_rows: int = 0
     # resource governance (PR 7): an *armed* repro.robust.Budget governing
     # this match (deadline / RIG memory / frontier caps) and the engine's
     # shared device CircuitBreaker; None = ungoverned (zero overhead)
@@ -64,6 +68,11 @@ class MatchResult:
     enum_method: str = "backtrack"       # strategy that actually ran
     deadline_exceeded: bool = False      # budget deadline cut enumeration
     degradations: List[str] = field(default_factory=list)
+    # resident-path observability (frontier-device-resident only; zero else)
+    resident_uploads: int = 0            # RIG matrices uploaded (0 = cached)
+    resident_bytes: int = 0              # resident matrix footprint
+    resident_dispatches: int = 0         # fused gather+AND device dispatches
+    small_frontier_host_routed: int = 0  # slabs host-routed below threshold
     rig: Optional[RIG] = field(default=None, repr=False)
 
 
@@ -116,6 +125,24 @@ class MatchStream:
     @property
     def degradations(self) -> List[str]:
         return self.stream.stats.degradations
+
+    @property
+    def resident_uploads(self) -> int:
+        return self.stream.stats.resident_uploads
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.stream.stats.resident_bytes
+
+    @property
+    def resident_dispatches(self) -> int:
+        st = self.stream.stats
+        return st.device_calls if st.method == "frontier-device-resident" \
+            else 0
+
+    @property
+    def small_frontier_host_routed(self) -> int:
+        return self.stream.stats.small_frontier_host_routed
 
 
 class GM:
@@ -175,8 +202,10 @@ class GM:
                                  materialize=opt.materialize,
                                  max_tuples=opt.max_tuples,
                                  method=opt.enum_method, trace=trace,
-                                 budget=opt.budget, breaker=opt.breaker)
+                                 budget=opt.budget, breaker=opt.breaker,
+                                 small_frontier_rows=opt.small_frontier_rows)
         t2 = time.perf_counter()
+        st = res.stats
         return MatchResult(
             count=res.count, tuples=res.tuples, order=order,
             rig_nodes=rig.n_nodes(),
@@ -184,11 +213,16 @@ class GM:
             matching_s=matching_s, enumerate_s=t2 - t1,
             total_s=matching_s + (t2 - t1),
             sim_passes=rig.sim.passes if rig.sim else 0,
-            truncated=res.stats.truncated,
-            enum_method=(opt.enum_method if rig.is_empty()
-                         else res.stats.method),
-            deadline_exceeded=res.stats.deadline_exceeded,
-            degradations=res.stats.degradations,
+            truncated=st.truncated,
+            enum_method=(opt.enum_method if rig.is_empty() else st.method),
+            deadline_exceeded=st.deadline_exceeded,
+            degradations=st.degradations,
+            resident_uploads=st.resident_uploads,
+            resident_bytes=st.resident_bytes,
+            resident_dispatches=(st.device_calls
+                                 if st.method == "frontier-device-resident"
+                                 else 0),
+            small_frontier_host_routed=st.small_frontier_host_routed,
             rig=rig)
 
     def match_stream(self, q: PatternQuery,
@@ -204,7 +238,8 @@ class GM:
         q, rig, order, matching_s = self.prepare_rig(q, opt, trace=trace)
         stream = iter_tuples(rig, order, chunk_size=chunk_size,
                              limit=opt.limit, method=opt.enum_method,
-                             budget=opt.budget, breaker=opt.breaker)
+                             budget=opt.budget, breaker=opt.breaker,
+                             small_frontier_rows=opt.small_frontier_rows)
         return MatchStream(query=q, stream=stream, order=order,
                            rig_nodes=rig.n_nodes(),
                            rig_edges=0 if rig.is_empty() else rig.n_edges(),

@@ -19,6 +19,16 @@ Two enumeration strategies over the compact candidate-local RIG layout:
   Frontier slabs bound the transient gather memory; both strategies
   enumerate in the same lexicographic order, so ``limit`` / ``max_tuples``
   / truncation semantics are preserved exactly.
+* ``frontier-device-resident`` — the packed RIG matrices are uploaded to
+  the device **once** (:class:`repro.jaxgm.frontier.ResidentIntersector`)
+  and each level ships only ``(F, K)`` int32 constraint-row indices; the
+  fused ``gather_intersect`` kernel does gather + AND + popcount on
+  device, and frontier expansion returns compact (row, column) pair pages
+  instead of dense boolean slabs.  Enumeration is *paged depth-first over
+  level-synchronous pages*: a level wider than ``max_frontier`` is split
+  into in-order pages that are recursed one at a time — same lexicographic
+  order, bounded memory, and no fallback-to-backtrack (this method never
+  raises :class:`FrontierOverflow`).
 
 Both strategies are implemented as *block generators* over the shared
 constraint machinery, which gives three consumption modes on one code
@@ -50,11 +60,13 @@ import numpy as np
 
 from . import bitset
 from .rig import RIG
+from .slabgeom import padded_rows_cap
 from ..obs.trace import NULL_TRACER
 from ..robust.errors import BreakerOpen, DeadlineExceeded, DeviceFailure
 
 DEFAULT_LIMIT = 10_000_000   # paper §7.1: stop after 10^7 matches
-ENUM_METHODS = ("backtrack", "frontier", "frontier-device")
+ENUM_METHODS = ("backtrack", "frontier", "frontier-device",
+                "frontier-device-resident")
 
 _FRONTIER_SLAB = 8192        # frontier rows per gather slab (memory bound)
 _INF_CAP = 1 << 62           # "materialize everything" sentinel
@@ -84,6 +96,14 @@ class MJoinStats:
     # backtrack) is recorded in order.
     deadline_exceeded: bool = False
     degradations: List[str] = field(default_factory=list)
+    # resident path (PR 8): one-time RIG upload accounting, device pair
+    # pages shipped, and levels routed to the host intersect because the
+    # frontier was below the padded-dispatch break-even (F < threshold)
+    resident_uploads: int = 0
+    resident_bytes: int = 0
+    resident_upload_s: float = 0.0
+    resident_pages: int = 0
+    small_frontier_host_routed: int = 0
 
 
 @dataclass
@@ -146,6 +166,37 @@ def device_intersector():
                 f"falling back to the host frontier path", RuntimeWarning,
                 stacklevel=3)
     return _DEVICE
+
+
+def resident_intersector(rig: RIG, stats: Optional[MJoinStats] = None):
+    """The RIG's device-resident executor, built (and uploaded) on first
+    use and cached on ``rig.resident`` — one upload per RIG, shared by
+    every enumeration over it.  Returns None if jax is unavailable.
+
+    With ``stats``, upload accounting is recorded: ``resident_uploads``
+    counts only *fresh* uploads (a cache hit contributes bytes but no
+    upload), so engine counters reflect real transfers.
+    """
+    global _DEVICE_FAILED
+    res = getattr(rig, "resident", None)
+    if res is None and not _DEVICE_FAILED:
+        try:
+            from ..jaxgm.frontier import ResidentIntersector
+            res = ResidentIntersector.build(rig)
+        except Exception as e:                      # pragma: no cover - env
+            _DEVICE_FAILED = True
+            warnings.warn(
+                f"frontier-device-resident unavailable "
+                f"({type(e).__name__}: {e}); falling back to the host "
+                f"frontier path", RuntimeWarning, stacklevel=3)
+            return None
+        rig.resident = res
+        if stats is not None:
+            stats.resident_uploads += 1
+            stats.resident_upload_s += res.upload_s
+    if res is not None and stats is not None:
+        stats.resident_bytes = res.nbytes
+    return res
 
 
 # ---------------------------------------------------------------- backtrack
@@ -267,7 +318,8 @@ def _mjoin_backtrack(rig: RIG, order: List[int], cons, limit,
 
 # ----------------------------------------------------------------- frontier
 def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
-                    intersector, stats: MJoinStats, breaker=None):
+                    intersector, stats: MJoinStats, breaker=None,
+                    small_rows: int = 0):
     """Gather the K constraint rows for one frontier slab and AND-reduce.
 
     Returns ``(acc, counts)``: the packed candidate rows (f, W) plus, on
@@ -282,8 +334,18 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
     device) degrades this slab — and effectively the query — to the fused
     numpy path, recorded once as the ``host-intersect`` ladder step.
     Results are identical either way.
+
+    ``small_rows`` is the sub-threshold host routing bound: a slab with
+    fewer rows than it skips the device entirely (the kernel pads every
+    dispatch to >= 128 rows, so tiny frontiers pay the full padded
+    dispatch for almost no work — BENCH data puts the break-even around
+    the padding floor).  Routed slabs are counted in
+    ``stats.small_frontier_host_routed``.
     """
     stats.intersections += len(cs) * len(slab)
+    if intersector is not None and small_rows and len(slab) < small_rows:
+        stats.small_frontier_host_routed += 1
+        intersector = None
     if intersector is not None:
         rows = np.stack([(rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
                          for (j, ei, isf) in cs], axis=1)    # (f, K, W)
@@ -313,7 +375,7 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
                      stats: MJoinStats, device: bool, max_frontier: int,
                      mat_cap: int, external: bool = False,
                      slab_rows: Optional[int] = None, budget=None,
-                     breaker=None):
+                     breaker=None, small_rows: int = 0):
     """Level-synchronous frontier enumeration as an event generator.
 
     Yields two event kinds:
@@ -370,11 +432,27 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
         srows = slab_rows or max(1, min(_FRONTIER_SLAB,
                                         (1 << 25) // max(n_i, 1)))
         if budget is not None:
-            # budget-tightened slab height: the gather transient is
-            # K rows of W words per frontier entry — the "smaller chunks"
-            # degradation step
-            cap = budget.slab_cap_rows(
-                max(1, len(cs)) * bitset.n_words(n_i) * 8)
+            # budget-tightened slab height — the "smaller chunks"
+            # degradation step.  The device intersector pads every
+            # dispatch (F -> pow2 >= 128, K -> pow2, W -> 128-lane
+            # multiples), so when a device dispatch is possible the cap
+            # must bound the *padded* allocation, not the logical gather
+            # transient — on ragged slabs padding can exceed it by >2x.
+            if intersector is not None and budget.max_slab_bytes is not None:
+                cap = padded_rows_cap(budget.max_slab_bytes,
+                                      max(1, len(cs)), bitset.n_words(n_i),
+                                      srows)
+                if cap == 0:
+                    # even the minimal 128-row padded dispatch blows the
+                    # cap: this query degrades to the host intersect
+                    intersector = None
+                    cap = budget.slab_cap_rows(
+                        max(1, len(cs)) * bitset.n_words(n_i) * 8)
+                    if "host-intersect" not in stats.degradations:
+                        stats.degradations.append("host-intersect")
+            else:
+                cap = budget.slab_cap_rows(
+                    max(1, len(cs)) * bitset.n_words(n_i) * 8)
             if cap is not None and cap < srows:
                 srows = cap
                 if "chunked-slabs" not in stats.degradations:
@@ -397,7 +475,8 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
                 else:
                     acc, counts = _slab_intersect(rig, cs, slab,
                                                   intersector, stats,
-                                                  breaker=breaker)
+                                                  breaker=breaker,
+                                                  small_rows=small_rows)
                 bits = None
             else:                      # disconnected pattern: cartesian
                 acc = None
@@ -456,10 +535,243 @@ def _frontier_events(rig: RIG, order: List[int], cons, limit,
             return
 
 
+# ------------------------------------------------------ resident frontier
+def _resident_frontier_events(rig: RIG, order: List[int], cons, limit,
+                              stats: MJoinStats, max_frontier: int,
+                              mat_cap: int, slab_rows: Optional[int] = None,
+                              budget=None, breaker=None,
+                              small_rows: int = 0):
+    """Paged device-resident frontier enumeration (event generator).
+
+    Yields the same ``("out", rows, visited)`` events as
+    :func:`_frontier_events` but executes each level against the
+    device-resident RIG (:func:`resident_intersector`): the host ships
+    only ``(F, K)`` int32 constraint-row indices per slab, and both the
+    gather + AND + popcount and the set-bit expansion run on device —
+    result pages come back as compact (row, column) pairs.
+
+    A level wider than ``max_frontier`` is *paged*, not abandoned: full
+    pages of child rows are recursed depth-first in order (page p's
+    completions all precede page p+1's by construction), which preserves
+    the exact lexicographic order of the level-synchronous path while
+    bounding live frontier memory to ~``max_frontier`` rows per level.
+    This generator therefore never raises :class:`FrontierOverflow`.
+
+    Degradation ladder: a failed device dispatch (or open breaker) — at
+    either the intersect or the expand step — degrades the remaining
+    enumeration to the host gather + numpy intersect (``host-intersect``),
+    and slabs below ``small_rows`` are host-routed pre-emptively (the
+    padded dispatch floor makes them device-unprofitable).  Without jax
+    the whole enumeration delegates to the host frontier path.
+    """
+    n = rig.query.n
+    sizes = [rig.cos_size(qi) for qi in order]
+    res = resident_intersector(rig, stats)
+    if res is None:
+        stats.method = "frontier"                    # jax missing: host path
+        yield from _frontier_events(rig, order, cons, limit, stats,
+                                    device=False, max_frontier=max_frontier,
+                                    mat_cap=mat_cap, slab_rows=slab_rows,
+                                    budget=budget, breaker=breaker)
+        return
+
+    page_rows = max(1, max_frontier)
+    state = {"count": 0, "n_mat": 0, "done": False, "dev_ok": True}
+    level_rows = [0] * n
+
+    root = np.arange(sizes[0], dtype=np.int64)[:, None]       # (F, 1)
+    if n == 1:
+        stats.frontier_peak = len(root)
+        stats.frontier_levels.append(len(root))
+        stats.expanded += len(root)
+        total = sizes[0]
+        if limit is not None and total >= limit:
+            total = limit
+            stats.truncated = True
+        blk = root[:min(total, mat_cap)] if mat_cap > 0 else None
+        yield ("out", blk, total)
+        return
+
+    def _host_acc(cs, slab):
+        j, ei, isf = cs[0]
+        acc = (rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
+        for (j, ei, isf) in cs[1:]:
+            acc &= (rig.fwd[ei] if isf else rig.bwd[ei])[slab[:, j]]
+        return acc
+
+    def _degrade():
+        state["dev_ok"] = False
+        if "host-intersect" not in stats.degradations:
+            stats.degradations.append("host-intersect")
+
+    def intersect_slab(cs, slab, w64):
+        """Dispatch one slab: ``(handle, acc_host, counts)`` — exactly one
+        of handle/acc_host is set; counts only on the device path."""
+        stats.intersections += len(cs) * len(slab)
+        if state["dev_ok"] and not (small_rows and len(slab) < small_rows):
+            t0 = time.perf_counter()
+            try:
+                if breaker is not None:
+                    handle, counts = breaker.call(
+                        lambda: res.intersect(cs, slab, w64))
+                else:
+                    handle, counts = res.intersect(cs, slab, w64)
+            except (DeviceFailure, BreakerOpen):
+                stats.device_s += time.perf_counter() - t0
+                _degrade()
+            else:
+                stats.device_s += time.perf_counter() - t0
+                stats.device_calls += 1
+                return handle, None, counts
+        elif state["dev_ok"]:
+            stats.small_frontier_host_routed += 1
+        return None, _host_acc(cs, slab), None
+
+    def slab_pairs(cs, slab, handle, acc, n_i, want):
+        """First ``want`` set-bit (row, column) pairs of one dispatched
+        slab, lexicographic; device pair page when possible."""
+        if handle is not None:
+            t0 = time.perf_counter()
+            try:
+                if breaker is not None:
+                    rid, cid = breaker.call(
+                        lambda: res.expand(handle, n_i, want))
+                else:
+                    rid, cid = res.expand(handle, n_i, want)
+            except (DeviceFailure, BreakerOpen):
+                stats.device_s += time.perf_counter() - t0
+                _degrade()
+                acc = _host_acc(cs, slab)
+            else:
+                stats.device_s += time.perf_counter() - t0
+                stats.resident_pages += 1
+                return rid, cid
+        bits = bitset.unpack(acc, n_i)
+        rid, cid = np.nonzero(bits)
+        return rid[:want], cid[:want]
+
+    def expand(frontier, i):
+        """Extend an ``(F, i)`` prefix page at level ``i`` (recursive)."""
+        last = i == n - 1
+        n_i = sizes[i]
+        cs = cons[i]
+        w64 = bitset.n_words(n_i)
+        srows = slab_rows or max(1, min(_FRONTIER_SLAB,
+                                        (1 << 25) // max(n_i, 1)))
+        if budget is not None and cs:
+            cap = None
+            if state["dev_ok"] and budget.max_slab_bytes is not None:
+                # charge the *padded* dispatch transient (index upload +
+                # AND output), same geometry the executor allocates
+                cap = res.rows_cap(budget.max_slab_bytes, len(cs), srows)
+                if cap == 0:
+                    _degrade()
+            if not state["dev_ok"] or budget.max_slab_bytes is None:
+                cap = budget.slab_cap_rows(
+                    len(cs) * bitset.n_words(n_i) * 8)
+            if cap is not None and cap < srows:
+                srows = cap
+                if "chunked-slabs" not in stats.degradations:
+                    stats.degradations.append("chunked-slabs")
+        pend: List[np.ndarray] = []
+        pend_rows = 0
+        for lo in range(0, len(frontier), srows):
+            if budget is not None and budget.expired():
+                stats.deadline_exceeded = True
+                stats.truncated = True
+                state["done"] = True
+                return
+            slab = frontier[lo:lo + srows]
+            if cs:
+                handle, acc, counts = intersect_slab(cs, slab, w64)
+            else:                          # disconnected pattern: cartesian
+                handle = acc = counts = None
+            if last:
+                if counts is None:
+                    counts = (bitset.count_rows(acc) if cs
+                              else np.full(len(slab), n_i, dtype=np.int64))
+                slab_total = int(counts.sum())
+                want = (min(mat_cap - state["n_mat"], slab_total)
+                        if mat_cap > 0 else 0)
+                blk = None
+                if want > 0:
+                    if cs:
+                        rid, cid = slab_pairs(cs, slab, handle, acc,
+                                              n_i, want)
+                    else:
+                        rid = np.repeat(np.arange(len(slab)), n_i)[:want]
+                        cid = np.tile(np.arange(n_i), len(slab))[:want]
+                    blk = np.concatenate(
+                        [slab[rid], cid[:, None].astype(np.int64)], axis=1)
+                    state["n_mat"] += len(blk)
+                state["count"] += slab_total
+                stats.expanded += slab_total
+                visited = slab_total
+                if limit is not None and state["count"] >= limit:
+                    over = state["count"] - limit
+                    stats.expanded -= over
+                    visited = slab_total - over
+                    state["count"] = limit
+                    stats.truncated = True
+                    state["done"] = True
+                yield ("out", blk, visited)
+                if state["done"]:
+                    return
+                continue
+            # intermediate level: child rows, paged
+            if cs:
+                if handle is not None:
+                    total = int(counts.sum())
+                    rid, cid = slab_pairs(cs, slab, handle, acc, n_i, total)
+                else:
+                    bits = bitset.unpack(acc, n_i)
+                    rid, cid = np.nonzero(bits)
+            else:
+                rid = np.repeat(np.arange(len(slab)), n_i)
+                cid = np.tile(np.arange(n_i), len(slab))
+            if len(rid):
+                child = np.concatenate(
+                    [slab[rid], cid[:, None].astype(np.int64)], axis=1)
+                level_rows[i] += len(child)
+                stats.expanded += len(child)
+                pend.append(child)
+                pend_rows += len(child)
+                stats.frontier_peak = max(stats.frontier_peak, pend_rows)
+            # flush full pages in order: page p's completions all precede
+            # page p+1's, so recursion preserves lexicographic order
+            while pend_rows >= page_rows:
+                cat = pend[0] if len(pend) == 1 else np.vstack(pend)
+                page, rest = cat[:page_rows], cat[page_rows:]
+                pend = [rest] if len(rest) else []
+                pend_rows = len(rest)
+                yield from expand(page, i + 1)
+                if state["done"]:
+                    return
+        if pend_rows:
+            cat = pend[0] if len(pend) == 1 else np.vstack(pend)
+            yield from expand(cat, i + 1)
+
+    try:
+        for lo in range(0, len(root), page_rows):
+            page = root[lo:lo + page_rows]
+            level_rows[0] += len(page)
+            stats.expanded += len(page)
+            stats.frontier_peak = max(stats.frontier_peak, len(page))
+            yield from expand(page, 1)
+            if state["done"]:
+                return
+    finally:
+        lvls = level_rows[:n - 1]
+        while len(lvls) > 1 and lvls[-1] == 0:
+            lvls.pop()
+        stats.frontier_levels = lvls
+
+
 def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
                     materialize: bool, max_tuples: int, stats: MJoinStats,
                     device: bool, max_frontier: int, budget=None,
-                    breaker=None) -> Tuple[int, Optional[np.ndarray]]:
+                    breaker=None, small_rows: int = 0
+                    ) -> Tuple[int, Optional[np.ndarray]]:
     mat_cap = 0
     if materialize:
         mat_cap = max_tuples if limit is None else min(max_tuples, limit)
@@ -467,7 +779,30 @@ def _mjoin_frontier(rig: RIG, order: List[int], cons, limit,
     count = 0
     for _, blk, visited in _frontier_events(rig, order, cons, limit, stats,
                                             device, max_frontier, mat_cap,
-                                            budget=budget, breaker=breaker):
+                                            budget=budget, breaker=breaker,
+                                            small_rows=small_rows):
+        if blk is not None and len(blk):
+            blocks.append(blk)
+        count += visited
+    assign = None
+    if materialize:
+        assign = (np.vstack(blocks) if blocks
+                  else np.empty((0, rig.query.n), dtype=np.int64))
+    return count, assign
+
+
+def _mjoin_resident(rig: RIG, order: List[int], cons, limit,
+                    materialize: bool, max_tuples: int, stats: MJoinStats,
+                    max_frontier: int, budget=None, breaker=None,
+                    small_rows: int = 0) -> Tuple[int, Optional[np.ndarray]]:
+    mat_cap = 0
+    if materialize:
+        mat_cap = max_tuples if limit is None else min(max_tuples, limit)
+    blocks: List[np.ndarray] = []
+    count = 0
+    for _, blk, visited in _resident_frontier_events(
+            rig, order, cons, limit, stats, max_frontier, mat_cap,
+            budget=budget, breaker=breaker, small_rows=small_rows):
         if blk is not None and len(blk):
             blocks.append(blk)
         count += visited
@@ -483,15 +818,22 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
           materialize: bool = True, max_tuples: int = 1_000_000,
           method: str = "backtrack",
           max_frontier: int = 1 << 25, trace=NULL_TRACER,
-          budget=None, breaker=None) -> MJoinResult:
+          budget=None, breaker=None,
+          small_frontier_rows: int = 0) -> MJoinResult:
     """Enumerate (or count) the occurrences encoded by ``rig``.
 
     ``limit`` bounds the number of results visited (None = exhaustive);
     ``max_tuples`` bounds materialization only (counting continues);
     ``method`` picks the enumeration strategy (see module docstring) —
     a frontier level wider than ``max_frontier`` rows falls back to
-    ``backtrack`` to keep memory bounded.  ``trace`` records the
-    ``enumerate`` / ``materialize`` phases as spans when profiling.
+    ``backtrack`` to keep memory bounded, except under
+    ``frontier-device-resident`` where such a level is *paged* through
+    in ``max_frontier``-row pages instead (no fallback, same order).
+    ``small_frontier_rows`` routes device slabs below that many rows
+    through the host intersect (the padded dispatch floor makes tiny
+    slabs device-unprofitable); 0 disables the routing.  ``trace``
+    records the ``enumerate`` / ``materialize`` phases as spans when
+    profiling.
 
     ``budget`` (an armed :class:`repro.robust.Budget`) adds cooperative
     governance: its deadline is checked at slab/block boundaries (a blown
@@ -531,11 +873,19 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
                                              budget=budget)
         else:
             try:
-                count, assign = _mjoin_frontier(
-                    rig, order, cons, limit, materialize, max_tuples, stats,
-                    device=(method == "frontier-device"),
-                    max_frontier=max_frontier, budget=budget,
-                    breaker=breaker)
+                if method == "frontier-device-resident":
+                    # paged: never raises FrontierOverflow itself, but the
+                    # no-jax delegation to the host frontier path can
+                    count, assign = _mjoin_resident(
+                        rig, order, cons, limit, materialize, max_tuples,
+                        stats, max_frontier=max_frontier, budget=budget,
+                        breaker=breaker, small_rows=small_frontier_rows)
+                else:
+                    count, assign = _mjoin_frontier(
+                        rig, order, cons, limit, materialize, max_tuples,
+                        stats, device=(method == "frontier-device"),
+                        max_frontier=max_frontier, budget=budget,
+                        breaker=breaker, small_rows=small_frontier_rows)
             except FrontierOverflow:
                 degr = stats.degradations + ["backtrack"]
                 stats = MJoinStats(method="backtrack",   # strategy that ran
@@ -587,7 +937,8 @@ class MJoinStream:
     def __init__(self, rig: RIG, order: List[int], *, chunk_size: int = 1024,
                  limit: Optional[int] = DEFAULT_LIMIT,
                  method: str = "backtrack", max_frontier: int = 1 << 25,
-                 slab_rows: Optional[int] = None, budget=None, breaker=None):
+                 slab_rows: Optional[int] = None, budget=None, breaker=None,
+                 small_frontier_rows: int = 0):
         if method not in ENUM_METHODS:
             raise ValueError(f"unknown enum method: {method!r} "
                              f"(expected one of {ENUM_METHODS})")
@@ -603,6 +954,7 @@ class MJoinStream:
         self.slab_rows = slab_rows
         self.budget = budget
         self.breaker = breaker
+        self.small_frontier_rows = small_frontier_rows
         self.stats = MJoinStats(method=method)
         self.count = 0               # tuples yielded so far
         self._it = self._chunks()
@@ -626,12 +978,21 @@ class MJoinStream:
         cons = _constraints(self.rig.query, self.order)
         if self.method != "backtrack":
             mat_cap = self.limit if self.limit is not None else _INF_CAP
-            gen = _frontier_events(
-                self.rig, self.order, cons, self.limit, stats,
-                device=(self.method == "frontier-device"),
-                max_frontier=self.max_frontier, mat_cap=mat_cap,
-                slab_rows=self.slab_rows, budget=self.budget,
-                breaker=self.breaker)
+            if self.method == "frontier-device-resident":
+                gen = _resident_frontier_events(
+                    self.rig, self.order, cons, self.limit, stats,
+                    max_frontier=self.max_frontier, mat_cap=mat_cap,
+                    slab_rows=self.slab_rows, budget=self.budget,
+                    breaker=self.breaker,
+                    small_rows=self.small_frontier_rows)
+            else:
+                gen = _frontier_events(
+                    self.rig, self.order, cons, self.limit, stats,
+                    device=(self.method == "frontier-device"),
+                    max_frontier=self.max_frontier, mat_cap=mat_cap,
+                    slab_rows=self.slab_rows, budget=self.budget,
+                    breaker=self.breaker,
+                    small_rows=self.small_frontier_rows)
             try:
                 try:
                     first = next(gen)
@@ -714,7 +1075,7 @@ def iter_tuples(rig: RIG, order: List[int], *, chunk_size: int = 1024,
                 limit: Optional[int] = DEFAULT_LIMIT,
                 method: str = "backtrack", max_frontier: int = 1 << 25,
                 slab_rows: Optional[int] = None, budget=None,
-                breaker=None) -> MJoinStream:
+                breaker=None, small_frontier_rows: int = 0) -> MJoinStream:
     """Streaming counterpart of :func:`mjoin`: a lazy, chunked enumerator.
 
     ``np.vstack(list(iter_tuples(rig, order, chunk_size=k)))`` equals
@@ -728,7 +1089,8 @@ def iter_tuples(rig: RIG, order: List[int], *, chunk_size: int = 1024,
     """
     return MJoinStream(rig, order, chunk_size=chunk_size, limit=limit,
                        method=method, max_frontier=max_frontier,
-                       slab_rows=slab_rows, budget=budget, breaker=breaker)
+                       slab_rows=slab_rows, budget=budget, breaker=breaker,
+                       small_frontier_rows=small_frontier_rows)
 
 
 # -------------------------------------------------------- cross-query batch

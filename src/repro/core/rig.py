@@ -23,7 +23,7 @@ per-level constraint rows a single ``matrix[frontier]`` gather.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Literal, Optional
 
 import numpy as np
@@ -61,6 +61,10 @@ class RIG:
     sim: Optional[SimResult] = None
     build_select_s: float = 0.0
     build_expand_s: float = 0.0
+    # device-resident executor handle (jaxgm.frontier.ResidentIntersector),
+    # built lazily on first frontier-device-resident enumeration and cached
+    # here so repeated enumerations over one RIG upload the index only once
+    resident: Optional[object] = field(default=None, repr=False)
 
     def cos_indices(self, q: int) -> np.ndarray:
         return self.cand[q]

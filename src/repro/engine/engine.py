@@ -7,7 +7,8 @@ Pipeline per query::
                                enum method, streaming chunk size)
          ──label-cache──▶ resident reachability/adjacency/interval labels
          ──execute──▶ host GM  or  device JaxGM
-         ──execute_stream──▶ chunked lazy enumeration (host data path)
+         ──execute_stream──▶ chunked lazy enumeration (host or
+                             device-resident data path)
          ──execute_many──▶ per-graph groups, canonical-form dedup, one
                            vmapped device dispatch + one micro-batched
                            frontier scheduler per group
@@ -94,6 +95,11 @@ class EngineOptions:
     # intersect kernel: None = auto (only on real TPU backends — the
     # interpreter fallback is orders of magnitude slower than numpy)
     frontier_device: Optional[bool] = None
+    # device-memory budget for resident RIG uploads: a frontier-device
+    # query whose estimated packed adjacency fits is planned as
+    # frontier-device-resident (index stays on device, host ships only
+    # per-level index vectors)
+    resident_max_bytes: int = 1 << 30
     limit: Optional[int] = DEFAULT_LIMIT
     materialize: bool = True
     # resource governance (PR 7): the default per-query Budget *template*
@@ -110,7 +116,8 @@ class EngineOptions:
         return DeviceCaps(max_q=self.max_q, max_e=self.max_e,
                           capacity=self.capacity,
                           min_graph_nodes=self.device_min_nodes,
-                          frontier_device=fd)
+                          frontier_device=fd,
+                          resident_max_bytes=self.resident_max_bytes)
 
 
 @dataclass
@@ -333,6 +340,9 @@ _ENGINE_COUNTERS = (
     # resource governance (PR 7); engine_device_retries and the
     # engine_breaker_state gauge are bound by the CircuitBreaker itself
     "deadline_exceeded", "budget_degradations", "transient_retries",
+    # resident enumerator (PR 8): uploads (cache misses), fused
+    # gather+AND+popcount dispatches, and sub-threshold slabs kept on host
+    "resident_uploads", "resident_dispatches", "small_frontier_host_routed",
 )
 
 
@@ -434,6 +444,8 @@ class Engine:
         self._h_rig_edges = h("rig_edges")
         self._h_sim_passes = h("sim_passes")
         self._h_results = h("result_count")
+        # resident-RIG upload footprint (observed once per fresh upload)
+        self._h_resident_bytes = h("resident_bytes")
         if graph is not None:
             self.register(graph, label_names=label_names)
 
@@ -615,6 +627,16 @@ class Engine:
         stats.rig_edges = m.rig_edges
         stats.truncated = m.truncated
         stats.enum_method = m.enum_method
+        uploads = getattr(m, "resident_uploads", 0)
+        if uploads:
+            self.counters["resident_uploads"] += uploads
+            self._h_resident_bytes.observe(getattr(m, "resident_bytes", 0))
+        dispatches = getattr(m, "resident_dispatches", 0)
+        if dispatches:
+            self.counters["resident_dispatches"] += dispatches
+        routed = getattr(m, "small_frontier_host_routed", 0)
+        if routed:
+            self.counters["small_frontier_host_routed"] += routed
         observe = self._governance(stats, m, observe)
         if observe:
             entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
@@ -825,9 +847,12 @@ class Engine:
         never pays for the tail.  ``chunk_size=None`` uses the planner's
         choice (estimated — and, on repeat queries, observed — result
         cardinality); ``limit`` defaults to ``options.limit``.  Streaming
-        always runs the host data path (the plan's enum_method, including
-        ``frontier-device``, is honoured; the vmapped whole-device matcher
-        has no incremental mode — see ROADMAP).
+        honours the plan's enum_method, including the device-capable paths:
+        ``frontier-device`` ships per-level slabs to the ``intersect``
+        kernel, and ``frontier-device-resident`` enumerates against the
+        device-resident RIG with lazily-consumed fixed-size result pages —
+        chunks stay byte-identical to host order either way.  Only the
+        vmapped whole-device matcher has no incremental mode (see ROADMAP).
         """
         res = self._resident(graph)
         stats = EngineStats(streamed=True)

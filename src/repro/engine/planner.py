@@ -18,8 +18,12 @@ paper ablates (Figs. 8-11); the planner picks them per query from
 * **enum method** — ``backtrack`` (one tuple at a time, constant space) vs
   ``frontier`` (batched level-synchronous enumeration) vs
   ``frontier-device`` (frontier with the AND+popcount step on the
-  ``intersect`` Pallas kernel).  Frontier wins when the enumeration visits
-  many partial assignments; tiny answer sets stay on backtracking.
+  ``intersect`` Pallas kernel) vs ``frontier-device-resident`` (the RIG
+  adjacency uploaded once and both gather+AND and pair expansion on
+  device, host ships only index vectors — picked when the estimated
+  resident footprint fits ``DeviceCaps.resident_max_bytes``).  Frontier
+  wins when the enumeration visits many partial assignments; tiny answer
+  sets stay on backtracking.
 
 Plans are cached by canonical query key; on repeat executions the observed
 ``RigStats`` re-plan the backend *and* the enum method (e.g. a query whose
@@ -35,6 +39,7 @@ from typing import List, Optional, Tuple
 from ..core.matcher import GMOptions
 from ..core.mjoin import DEFAULT_LIMIT
 from ..core.query import PatternQuery
+from ..core.slabgeom import round_up
 from .stats import GraphStats, RigStats
 
 __all__ = ["DeviceCaps", "Plan", "Planner"]
@@ -52,6 +57,10 @@ class DeviceCaps:
     capacity: int = 4096
     min_graph_nodes: int = 512    # below this, dispatch overhead dominates
     frontier_device: bool = False  # route frontier ANDs through the kernel
+    # device-memory budget for a resident RIG upload; a frontier-device
+    # query whose estimated packed adjacency fits stays fully on device
+    # (frontier-device-resident), larger ones ship per-level slabs
+    resident_max_bytes: int = 1 << 30
 
 
 @dataclass
@@ -60,9 +69,12 @@ class Plan:
     sim_algo: str                  # bas | dag | dagmap | none
     check_method: str              # binsearch | bititer | bitbat
     ordering: str = "jo"
-    enum_method: str = "backtrack"  # backtrack | frontier | frontier-device
+    enum_method: str = "backtrack"  # see repro.core.mjoin.ENUM_METHODS
     sim_passes: Optional[int] = 4
     chunk_size: int = 1024         # streaming chunk rows (execute_stream)
+    # device slabs below this row count are host-routed (padded dispatch
+    # floor); set for device enum methods, 0 for host methods
+    small_frontier_rows: int = 0
     est_cost: float = 0.0
     est_card: float = 0.0
     reasons: Tuple[str, ...] = ()
@@ -70,10 +82,12 @@ class Plan:
     def batch_group(self) -> str:
         """Execution lane for cross-request batching in ``execute_many``:
         requests in the same lane on the same resident graph share one
-        dispatch (vmapped device matcher / fused frontier slabs)."""
+        dispatch (vmapped device matcher / fused frontier slabs).  The
+        resident enumerator shares the frontier-device lane — batching is
+        per-level either way, only the slab transport differs."""
         if self.backend == DEVICE:
             return "device"
-        if self.enum_method == "frontier-device":
+        if self.enum_method in ("frontier-device", "frontier-device-resident"):
             return "frontier-device"
         return "host"
 
@@ -91,6 +105,7 @@ class Plan:
                          ordering=self.ordering,
                          enum_method=self.enum_method, limit=limit,
                          materialize=materialize, max_tuples=max_tuples,
+                         small_frontier_rows=self.small_frontier_rows,
                          budget=budget, breaker=breaker)
 
     def explain(self) -> str:
@@ -121,6 +136,10 @@ FRONTIER_MIN_RESULTS = 2048
 STREAM_CHUNK_MIN = 64
 STREAM_CHUNK_MAX = 8192
 STREAM_TARGET_CHUNKS = 16          # aim for ~this many chunks per result set
+# Device slabs below this many rows lose to the host intersect: the device
+# pads every dispatch to a >= 128-row tile (see repro.core.slabgeom), so a
+# handful of real rows pays the full floor (BENCH_mjoin small-slab rows).
+SMALL_FRONTIER_HOST_ROWS = 128
 
 
 class Planner:
@@ -171,8 +190,32 @@ class Planner:
         return "bitbat"
 
     # --------------------------------------------------------- enum method
-    def _frontier_kind(self) -> str:
-        return "frontier-device" if self.caps.frontier_device else "frontier"
+    def _est_resident_bytes(self, q: PatternQuery) -> int:
+        """Upper estimate of the packed RIG adjacency a resident upload
+        would pin on device: cos sizes bounded by the exact match-set
+        sizes, lane width padded as :func:`pack_resident_rig` pads it."""
+        ms = [self.stats.match_set_size(l) for l in q.labels]
+        w_lanes = round_up(max((max(ms, default=0) + 31) // 32, 128), 128)
+        rows = 1 + sum(ms[e.src] + ms[e.dst] for e in q.edges)
+        return rows * w_lanes * 4
+
+    def _frontier_kind(self, q: PatternQuery,
+                       reasons: Optional[List[str]] = None) -> str:
+        if not self.caps.frontier_device:
+            return "frontier"
+        est = self._est_resident_bytes(q)
+        if est <= self.caps.resident_max_bytes:
+            if reasons is not None:
+                reasons.append(
+                    f"estimated resident RIG ({est} B) fits device budget "
+                    f"({self.caps.resident_max_bytes} B): index stays "
+                    f"on device")
+            return "frontier-device-resident"
+        if reasons is not None:
+            reasons.append(
+                f"estimated resident RIG ({est} B) exceeds device budget "
+                f"({self.caps.resident_max_bytes} B): per-level slabs")
+        return "frontier-device"
 
     def _pick_enum(self, q: PatternQuery, reasons: List[str]) -> str:
         if self.force_enum is not None:
@@ -182,7 +225,7 @@ class Planner:
             reasons.append(
                 f"estimated answer set >= {FRONTIER_EST_RESULTS}: "
                 f"batched frontier enumeration")
-            return self._frontier_kind()
+            return self._frontier_kind(q, reasons)
         reasons.append("small estimated answer set: backtracking enumeration")
         return "backtrack"
 
@@ -209,6 +252,10 @@ class Planner:
         return Plan(backend=backend, sim_algo=sim, check_method=check,
                     enum_method=enum,
                     chunk_size=self.pick_chunk_size(est_card),
+                    small_frontier_rows=(
+                        SMALL_FRONTIER_HOST_ROWS
+                        if enum in ("frontier-device",
+                                    "frontier-device-resident") else 0),
                     est_cost=self.stats.estimate_cost(q),
                     est_card=est_card,
                     reasons=tuple(reasons))
@@ -235,17 +282,21 @@ class Planner:
         if rig.observations and plan.enum_method == "backtrack" and (
                 rig.rig_nodes >= FRONTIER_RIG_NODES
                 or rig.count >= FRONTIER_MIN_RESULTS):
+            kind = self._frontier_kind(q)
             plan = replace(
-                plan, enum_method=self._frontier_kind(),
+                plan, enum_method=kind,
+                small_frontier_rows=(SMALL_FRONTIER_HOST_ROWS
+                                     if kind != "frontier" else 0),
                 reasons=plan.reasons + (
                     f"observed RIG has {rig.rig_nodes} nodes / "
                     f"{rig.count} results: frontier enumeration",))
         elif (rig.observations
-              and plan.enum_method in ("frontier", "frontier-device")
+              and plan.enum_method in ("frontier", "frontier-device",
+                                       "frontier-device-resident")
               and rig.rig_nodes < TINY_RIG_NODES
               and rig.count < FRONTIER_MIN_RESULTS):
             plan = replace(
-                plan, enum_method="backtrack",
+                plan, enum_method="backtrack", small_frontier_rows=0,
                 reasons=plan.reasons + (
                     f"observed tiny RIG ({rig.rig_nodes} nodes, "
                     f"{rig.count} results): backtracking wins",))

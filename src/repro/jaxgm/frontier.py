@@ -1,84 +1,303 @@
-"""Device executor for the host-driven frontier MJoin.
+"""Device executors for the host-driven frontier MJoin.
 
-``repro.core.mjoin`` enumerates with host-side gathers; the per-level
-AND-reduce + popcount over the gathered ``(F, K, W)`` frontier block is the
-arithmetic hot spot, and this module routes it through the ``intersect``
-Pallas kernel (``repro.kernels.intersect``).  The host path packs into
-uint64 words while the TPU kernel operates on uint32 lanes — the two
-layouts are bit-compatible little-endian, so the conversion is a view.
+``repro.core.mjoin`` enumerates with host-side frontier tables; this
+module holds the two device execution paths for the per-level constraint
+work:
 
-Inputs are padded to kernel block multiples: F to the next power of two
-(>= 128, so interpret-mode retraces stay bounded to O(log F) distinct
-shapes), W to a multiple of 128 lanes, and K to the next power of two
-using all-ones rows (the AND identity — needed by the cross-request
-micro-batched path, where the fused ``(ΣF, K, W)`` slabs built by
-``repro.core.mjoin.mjoin_batched`` mix queries with different constraint
-counts round to round).  Off TPU the kernel runs in interpreter mode —
-correct but slow, used by the equivalence tests.
+* :class:`DeviceIntersector` — the *slab-shipping* path
+  (``frontier-device``): the host gathers the ``(F, K, W)`` constraint
+  rows, ships the slab, and the device AND-reduces + popcounts it.
+* :class:`ResidentIntersector` — the *resident* path
+  (``frontier-device-resident``): every packed RIG adjacency matrix is
+  concatenated and uploaded **once** after ``BuildRIG``
+  (:func:`repro.jaxgm.device_graph.pack_resident_rig`); each level then
+  ships only the ``(F, K)`` int32 constraint-row indices and the fused
+  ``gather_intersect`` kernel does the gather + AND + popcount on device.
+  Frontier expansion (set-bit -> (row, column) pairs) also runs on device
+  (:func:`repro.kernels.gather_intersect.expand_pairs`), so the host
+  receives compact pair pages instead of dense boolean slabs.
+
+Both executors resolve a common ``mode``:
+
+* ``"pallas"``    — the compiled TPU kernels (default on TPU backends);
+* ``"xla"``       — the same contractions as plain jitted XLA (default
+  elsewhere: orders of magnitude faster than the Pallas interpreter and
+  still measures the real transfer gap between the two paths);
+* ``"interpret"`` — the Pallas kernels under the interpreter (CI
+  equivalence tests for the kernel logic itself).
+
+Set the module global ``DEFAULT_MODE`` to pin a mode process-wide (the
+equivalence suite sets ``"interpret"``).
+
+Executables are compiled **ahead of time** per shape and the compile wall
+time is recorded in ``compile_s``, separately from ``kernel_s`` — the
+fenced per-call device time.  Earlier versions folded first-call
+compilation into ``kernel_s``, skewing traces and BENCH rows.
+
+Padding geometry (F to the next pow2 >= 128, W to a multiple of 128
+uint32 lanes, K to pow2 with all-ones AND-identity rows) comes from
+:mod:`repro.core.slabgeom` — the same formulas budget enforcement uses,
+so ``Budget.max_slab_bytes`` bounds the *real* device allocation
+(``peak_slab_bytes`` / ``peak_dispatch_bytes`` expose it).
 """
 
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.intersect import intersect_pallas
+from ..core.slabgeom import (padded_slab_bytes, padded_slab_shape,
+                             pow2_at_least, resident_dispatch_bytes,
+                             resident_rows_cap, round_up)
+from ..kernels.gather_intersect import (expand_pairs, gather_intersect_pallas,
+                                        gather_intersect_xla)
+from ..kernels.intersect import intersect_pallas, intersect_xla
 
-__all__ = ["DeviceIntersector"]
+__all__ = ["DeviceIntersector", "ResidentIntersector", "resolve_mode",
+           "DEFAULT_MODE"]
+
+# process-wide mode pin: None = auto (pallas on TPU, xla elsewhere)
+DEFAULT_MODE: Optional[str] = None
+
+_MODES = ("pallas", "xla", "interpret")
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _pow2_at_least(x: int, floor: int = 128) -> int:
-    p = floor
-    while p < x:
-        p *= 2
-    return p
+def resolve_mode(mode: Optional[str] = None) -> str:
+    mode = DEFAULT_MODE if mode is None else mode
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode not in _MODES:
+        raise ValueError(f"unknown device mode: {mode!r} "
+                         f"(expected one of {_MODES})")
+    return mode
 
 
 class DeviceIntersector:
     """AND-reduce + popcount one ``(F, K, W)`` uint64 frontier block.
 
     Callable: ``rows (F, K, W64) uint64 -> (and_rows (F, W64) uint64,
-    counts (F,) int64)``.  ``interpret=None`` auto-detects: compiled on
-    TPU backends, interpreter elsewhere.
+    counts (F,) int64)``.  ``interpret`` is a legacy alias: ``True`` pins
+    the interpreter, ``False`` the compiled Pallas kernel; prefer
+    ``mode`` (see module docstring).
     """
 
-    def __init__(self, interpret: Optional[bool] = None):
-        self.interpret = (jax.default_backend() != "tpu"
-                          if interpret is None else interpret)
+    def __init__(self, interpret: Optional[bool] = None,
+                 mode: Optional[str] = None):
+        if mode is None and interpret is not None:
+            mode = "interpret" if interpret else "pallas"
+        self.mode = resolve_mode(mode)
         self.calls = 0
-        self.kernel_s = 0.0       # fenced wall time inside the kernel
+        self.kernel_s = 0.0       # fenced per-call device time (no compile)
+        self.compile_s = 0.0      # one-time AOT compile time per shape
+        self.peak_slab_bytes = 0  # largest padded slab actually allocated
+        self.h2d_bytes = 0        # cumulative host->device slab traffic
+        self._compiled = {}
+
+    @property
+    def interpret(self) -> bool:
+        return self.mode == "interpret"
+
+    def _executor(self, fp: int, kp: int, wp: int):
+        key = (fp, kp, wp)
+        fn = self._compiled.get(key)
+        if fn is None:
+            spec = jax.ShapeDtypeStruct((fp, kp, wp), jnp.uint32)
+            t0 = time.perf_counter()
+            if self.mode == "xla":
+                fn = intersect_xla.lower(spec).compile()
+            else:
+                bw = max(d for d in (512, 256, 128) if wp % d == 0)
+                fn = intersect_pallas.lower(
+                    spec, bf=128, bw=bw,
+                    interpret=self.mode == "interpret").compile()
+            self.compile_s += time.perf_counter() - t0
+            self._compiled[key] = fn
+        return fn
 
     def __call__(self, rows_u64: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray]:
         f, k, w64 = rows_u64.shape
-        w = 2 * w64                                     # uint32 words
+        w = 2 * w64                                     # uint32 lanes
         rows = np.ascontiguousarray(rows_u64).view(np.uint32)
         rows = rows.reshape(f, k, w)
-        fp, wp = _pow2_at_least(f), _round_up(max(w, 128), 128)
-        kp = _pow2_at_least(k, floor=1)
-        if fp != f or wp != w or kp != k:
+        fp, kp, wp = padded_slab_shape(f, k, w64)
+        if (fp, kp, wp) != (f, k, w):
             padded = np.zeros((fp, kp, wp), dtype=np.uint32)
             padded[:f, :k, :w] = rows
             if kp != k:          # AND-identity rows keep real lanes intact
                 padded[:f, k:, :w] = np.uint32(0xFFFFFFFF)
             rows = padded
-        bw = max(d for d in (512, 256, 128) if wp % d == 0)
+        self.peak_slab_bytes = max(self.peak_slab_bytes,
+                                   padded_slab_bytes(f, k, w64))
+        self.h2d_bytes += rows.nbytes
+        fn = self._executor(fp, kp, wp)
         # fence with block_until_ready so kernel_s is true device time, not
         # async-dispatch latency (the conversion below would hide the wait)
         t0 = time.perf_counter()
-        and32, counts = intersect_pallas(jnp.asarray(rows), bf=128, bw=bw,
-                                         interpret=self.interpret)
+        and32, counts = fn(jnp.asarray(rows))
         jax.block_until_ready((and32, counts))
         self.kernel_s += time.perf_counter() - t0
         self.calls += 1
         and_rows = np.ascontiguousarray(
             np.asarray(and32)[:f, :w]).view(np.uint64)
         return and_rows, np.asarray(counts)[:f].astype(np.int64)
+
+
+class _ResidentSlab:
+    """Opaque handle for one dispatched slab: the padded AND rows, still
+    on device, awaiting an optional :meth:`ResidentIntersector.expand`."""
+
+    __slots__ = ("acc", "f")
+
+    def __init__(self, acc, f: int):
+        self.acc = acc
+        self.f = f
+
+
+class ResidentIntersector:
+    """Device-resident RIG executor (see module docstring).
+
+    Built once per RIG via :meth:`build` (cached on ``rig.resident`` by
+    ``repro.core.mjoin.resident_intersector``); ``nbytes`` is the resident
+    matrix footprint and ``upload_s`` the fenced one-time upload.
+    """
+
+    # device->host pair pages are sliced from this bucket granularity so
+    # expand retraces stay bounded
+    PAGE_BUCKET = 1024
+
+    def __init__(self, matrix32: np.ndarray, fwd_off: List[int],
+                 bwd_off: List[int], zero_row: int,
+                 mode: Optional[str] = None):
+        self.mode = resolve_mode(mode)
+        t0 = time.perf_counter()
+        self.matrix = jnp.asarray(matrix32)
+        jax.block_until_ready(self.matrix)
+        self.upload_s = time.perf_counter() - t0
+        self.nbytes = int(self.matrix.size) * 4
+        self.w_lanes = int(self.matrix.shape[1])
+        self.fwd_off = fwd_off
+        self.bwd_off = bwd_off
+        self.zero_row = zero_row
+        self.calls = 0            # gather-intersect dispatches
+        self.expand_calls = 0     # pair-page dispatches
+        self.h2d_bytes = 0        # cumulative host->device index traffic
+        self.kernel_s = 0.0       # fenced per-call device time (no compile)
+        self.compile_s = 0.0      # one-time AOT compile time per shape
+        self.peak_dispatch_bytes = 0
+        self._compiled = {}
+
+    @classmethod
+    def build(cls, rig, mode: Optional[str] = None) -> "ResidentIntersector":
+        from .device_graph import pack_resident_rig
+        matrix32, fwd_off, bwd_off, zero_row = pack_resident_rig(rig)
+        return cls(matrix32, fwd_off, bwd_off, zero_row, mode=mode)
+
+    def rows_cap(self, max_bytes: int, k: int, at_most: int) -> int:
+        """Largest slab height whose padded dispatch transient fits
+        ``max_bytes`` (0 = infeasible: route the level through the host)."""
+        return resident_rows_cap(max_bytes, k, self.w_lanes, at_most)
+
+    # ------------------------------------------------------------ executors
+    def _intersect_exec(self, fp: int, k: int, w32: int):
+        key = ("isect", fp, k, w32)
+        fn = self._compiled.get(key)
+        if fn is None:
+            mspec = jax.ShapeDtypeStruct(self.matrix.shape, jnp.uint32)
+            ispec = jax.ShapeDtypeStruct((fp, k), jnp.int32)
+            t0 = time.perf_counter()
+            if self.mode == "xla":
+                fn = gather_intersect_xla.lower(mspec, ispec,
+                                                w32=w32).compile()
+            else:
+                fn = gather_intersect_pallas.lower(
+                    mspec, ispec, w32=w32, bf=8,
+                    interpret=self.mode == "interpret").compile()
+            self.compile_s += time.perf_counter() - t0
+            self._compiled[key] = fn
+        return fn
+
+    def _expand_exec(self, fp: int, w32: int, n_i: int, size: int):
+        key = ("expand", fp, w32, n_i, size)
+        fn = self._compiled.get(key)
+        if fn is None:
+            aspec = jax.ShapeDtypeStruct((fp, w32), jnp.uint32)
+            t0 = time.perf_counter()
+            fn = expand_pairs.lower(aspec, n_i=n_i, size=size).compile()
+            self.compile_s += time.perf_counter() - t0
+            self._compiled[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------ API
+    def intersect(self, cs, slab: np.ndarray, w64: int
+                  ) -> Tuple[_ResidentSlab, np.ndarray]:
+        """One level dispatch for one frontier slab.
+
+        ``cs`` is the level's constraint list ``(prefix_pos, edge, isf)``
+        (as built by ``repro.core.mjoin._constraints``), ``slab`` the
+        ``(F, i)`` frontier rows, ``w64`` the level's packed row width in
+        uint64 words.  Ships only the ``(F, K)`` int32 index matrix;
+        returns the on-device AND rows (handle) plus host popcounts.
+        """
+        f, k = len(slab), len(cs)
+        idx = np.empty((f, k), dtype=np.int32)
+        for c, (j, ei, isf) in enumerate(cs):
+            off = self.fwd_off[ei] if isf else self.bwd_off[ei]
+            idx[:, c] = off + slab[:, j]
+        fp = pow2_at_least(f)
+        if fp != f:
+            # padding rows gather the dedicated all-zero resident row, so
+            # padded AND rows are zero: counts and expands never see them
+            pad = np.full((fp - f, k), self.zero_row, dtype=np.int32)
+            idx = np.vstack([idx, pad])
+        w32 = 2 * w64
+        fn = self._intersect_exec(fp, k, w32)
+        self.h2d_bytes += idx.nbytes
+        self.peak_dispatch_bytes = max(
+            self.peak_dispatch_bytes,
+            resident_dispatch_bytes(f, k, self.w_lanes))
+        t0 = time.perf_counter()
+        acc, counts = fn(self.matrix, jnp.asarray(idx))
+        jax.block_until_ready((acc, counts))
+        self.kernel_s += time.perf_counter() - t0
+        self.calls += 1
+        return (_ResidentSlab(acc, f),
+                np.asarray(counts)[:f].astype(np.int64))
+
+    def expand(self, handle: _ResidentSlab, n_i: int, want: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """First ``want`` set-bit ``(row, column)`` pairs of a dispatched
+        slab, in row-major (= lexicographic) order — computed on device,
+        shipped as one compact page."""
+        if want <= 0:
+            z = np.empty(0, dtype=np.int64)
+            return z, z
+        if self.mode == "xla":
+            # Plain-XLA mode means no accelerator: fetch the packed AND
+            # rows and extract on the host, where unpackbits + nonzero is
+            # an order of magnitude faster than XLA's serialized nonzero
+            # lowering.  Pallas/interpret modes extract on device, where
+            # shipping the compact (row, col) page beats shipping rows.
+            t0 = time.perf_counter()
+            lanes = (n_i + 31) // 32          # fetch only the live lanes
+            rows = np.asarray(handle.acc[:handle.f, :lanes])
+            bits = np.unpackbits(np.ascontiguousarray(rows).view(np.uint8),
+                                 axis=1, bitorder="little")[:, :n_i]
+            rid, cid = np.nonzero(bits)
+            self.kernel_s += time.perf_counter() - t0
+            self.expand_calls += 1
+            return rid[:want].astype(np.int64), cid[:want].astype(np.int64)
+        size = round_up(want, self.PAGE_BUCKET)
+        fp, w32 = handle.acc.shape
+        fn = self._expand_exec(int(fp), int(w32), n_i, size)
+        t0 = time.perf_counter()
+        rid, cid = fn(handle.acc)
+        jax.block_until_ready((rid, cid))
+        self.kernel_s += time.perf_counter() - t0
+        self.expand_calls += 1
+        return (np.asarray(rid)[:want].astype(np.int64),
+                np.asarray(cid)[:want].astype(np.int64))

@@ -43,6 +43,22 @@ def _intersect_kernel(rows_ref, and_ref, cnt_ref, acc_ref, *, k_rows: int):
         cnt_ref[...] = acc_ref[...]
 
 
+@jax.jit
+def intersect_xla(rows: jax.Array):
+    """XLA expression of the same fused AND-reduce + popcount.
+
+    rows: uint32 (F, K, W) -> (and_rows uint32 (F, W), counts int32 (F,)).
+    The default executor on non-TPU backends, where it beats the Pallas
+    interpreter by orders of magnitude while keeping the contraction on
+    the device runtime (shapes are identical, so results are too).
+    """
+    acc = rows[:, 0]
+    for i in range(1, rows.shape[1]):
+        acc = acc & rows[:, i]
+    counts = jax.lax.population_count(acc).astype(jnp.int32).sum(axis=1)
+    return acc, counts
+
+
 @functools.partial(jax.jit, static_argnames=("bf", "bw", "interpret"))
 def intersect_pallas(rows: jax.Array, *, bf: int = 128, bw: int = 512,
                      interpret: bool = False):

@@ -191,3 +191,172 @@ def test_frontier_device_truncation():
         bt = match(graph, q, limit=5, enum_method="backtrack")
         assert dv.count == 5 and dv.truncated
         assert np.array_equal(dv.tuples, bt.tuples)
+
+
+# ------------------------------------------------- resident device path
+RESIDENT = "frontier-device-resident"
+
+
+@needs_jax
+@pytest.mark.parametrize("qtype", ["C", "H", "D"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_resident_matches_backtrack_and_bruteforce(qtype, seed):
+    graph = random_labeled_graph(55, avg_degree=2.4, n_labels=4, seed=seed)
+    q = random_query_from_graph(graph, n_nodes=4, qtype=qtype,
+                                seed=seed + 20)
+    _assert_equivalent(graph, q, methods=("backtrack", RESIDENT))
+
+
+@needs_jax
+def test_resident_truncation_limit_mid_page():
+    """A ``limit`` landing inside a device result page must cut the final
+    block at exactly ``limit`` rows, byte-identical to backtrack."""
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    assert full.count > 10
+    for lim in (1, 3, full.count // 2, full.count, full.count + 1):
+        bt = match(graph, q, limit=lim, enum_method="backtrack")
+        rs = match(graph, q, limit=lim, enum_method=RESIDENT)
+        assert bt.count == rs.count
+        assert bt.truncated == rs.truncated
+        assert np.array_equal(bt.tuples, rs.tuples)
+
+
+@needs_jax
+def test_resident_pages_instead_of_backtrack_fallback():
+    """Where plain frontier overflows ``max_frontier`` and falls back to
+    backtracking, the resident enumerator pages level-by-level: same
+    tuples, no strategy change, no overflow degradation."""
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    rig = build_rig(graph, q.transitive_reduction())
+    order = get_order(rig, "jo")
+    ref = mjoin(rig, order, limit=None)
+    host = mjoin(rig, order, limit=None, method="frontier", max_frontier=2)
+    assert host.stats.method == "backtrack"          # the old behaviour
+    paged = mjoin(rig, order, limit=None, method=RESIDENT, max_frontier=2)
+    assert paged.stats.method == RESIDENT            # no fallback
+    assert "backtrack" not in paged.stats.degradations
+    assert paged.count == ref.count
+    assert np.array_equal(paged.tuples, ref.tuples)
+
+
+@needs_jax
+def test_resident_max_tuples_caps_materialization_not_count():
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    full = match(graph, q, limit=None)
+    got = match(graph, q, limit=None, enum_method=RESIDENT, max_tuples=7)
+    assert got.count == full.count
+    assert got.tuples.shape == (7, q.n)
+    assert np.array_equal(got.tuples, full.tuples[:7])
+
+
+@needs_jax
+def test_resident_stream_chunks_byte_identical():
+    from repro.core.mjoin import iter_tuples
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    qr = q.transitive_reduction()
+    rig = build_rig(graph, qr)
+    order = get_order(rig, "jo")
+    ref = mjoin(rig, order, limit=None)
+    for chunk in (1, 7, 64):
+        got = list(iter_tuples(rig, order, chunk_size=chunk, limit=None,
+                               method=RESIDENT, max_frontier=4))
+        assert all(len(c) == chunk for c in got[:-1])
+        assert np.array_equal(np.vstack(got), ref.tuples)
+
+
+@needs_jax
+def test_resident_deadline_yields_partial_prefix():
+    from repro.robust import Budget
+    graph = random_labeled_graph(80, avg_degree=3.0, n_labels=2, seed=3)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="D", seed=4)
+    qr = q.transitive_reduction()
+    rig = build_rig(graph, qr)
+    order = get_order(rig, "jo")
+    full = mjoin(rig, order, limit=None)
+    t = [0.0]
+
+    def clk():
+        t[0] += 0.02
+        return t[0]
+
+    b = Budget(deadline_s=0.05).start(clock=clk)
+    got = mjoin(rig, order, limit=None, method=RESIDENT, max_frontier=2,
+                budget=b)
+    assert got.stats.deadline_exceeded and got.stats.truncated
+    assert got.count < full.count
+    assert np.array_equal(got.tuples, full.tuples[:got.count])
+
+
+@needs_jax
+def test_resident_interpret_mode_equivalence(monkeypatch):
+    """CI's Pallas-kernel coverage: the fused gather+AND+popcount and the
+    pair-expansion kernels in interpreter mode, byte-identical output."""
+    import repro.jaxgm.frontier as frontier
+    monkeypatch.setattr(frontier, "DEFAULT_MODE", "interpret")
+    graph = random_labeled_graph(40, avg_degree=2.2, n_labels=3, seed=11)
+    q = random_query_from_graph(graph, n_nodes=3, qtype="H", seed=12)
+    bt = match(graph, q, limit=None, enum_method="backtrack")
+    rs = match(graph, q, limit=None, enum_method=RESIDENT)
+    assert rs.count == bt.count
+    assert np.array_equal(rs.tuples, bt.tuples)
+    assert rs.resident_dispatches > 0                # the kernel really ran
+
+
+@needs_jax
+def test_resident_small_frontier_host_routing():
+    """Slabs below the threshold stay on the host (padded-dispatch floor),
+    with the routing observable and results unchanged."""
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=7)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=8)
+    bt = match(graph, q, limit=None, enum_method="backtrack")
+    rs = match(graph, q, limit=None, enum_method=RESIDENT,
+               small_frontier_rows=1 << 20)
+    assert rs.count == bt.count
+    assert np.array_equal(rs.tuples, bt.tuples)
+    assert rs.small_frontier_host_routed > 0
+    assert rs.resident_dispatches == 0               # everything re-routed
+
+
+@needs_jax
+def test_resident_device_failure_degrades_to_host():
+    from repro.robust import CircuitBreaker, faults
+    graph = random_labeled_graph(60, avg_degree=2.5, n_labels=3, seed=7)
+    q = random_query_from_graph(graph, n_nodes=4, qtype="H", seed=8)
+    qr = q.transitive_reduction()
+    rig = build_rig(graph, qr)
+    order = get_order(rig, "jo")
+    ref = mjoin(rig, order, limit=None)
+    with faults.inject(faults.every("device_dispatch", 1)):   # all attempts
+        got = mjoin(rig, order, limit=None, method=RESIDENT,
+                    breaker=CircuitBreaker())
+    assert "host-intersect" in got.stats.degradations
+    assert got.count == ref.count
+    assert np.array_equal(got.tuples, ref.tuples)
+
+
+@needs_jax
+@given(st.integers(0, 10_000), st.sampled_from(["C", "H", "D"]),
+       st.integers(2, 128))
+@settings(max_examples=15, deadline=None)
+def test_resident_equivalence_random(seed, qtype, max_frontier):
+    """Randomized paging: any page size yields backtrack's exact output."""
+    graph = random_labeled_graph(40, avg_degree=2.0, n_labels=5,
+                                 kind="uniform", seed=seed % 89)
+    q = random_query_from_graph(graph, n_nodes=4, qtype=qtype, seed=seed)
+    bt = match(graph, q, limit=None, enum_method="backtrack")
+    rs = match(graph, q, limit=None, enum_method=RESIDENT)
+    assert bt.count == rs.count
+    assert np.array_equal(bt.tuples, rs.tuples)
+    rig = build_rig(graph, q.transitive_reduction())
+    if not rig.is_empty():
+        order = get_order(rig, "jo")
+        ref = mjoin(rig, order, limit=None)
+        paged = mjoin(rig, order, limit=None, method=RESIDENT,
+                      max_frontier=max_frontier)
+        assert paged.count == ref.count
+        assert np.array_equal(paged.tuples, ref.tuples)

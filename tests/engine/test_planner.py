@@ -9,7 +9,7 @@ from repro.data.graphs import random_labeled_graph
 from repro.data.queries import random_query_from_graph
 from repro.engine import DeviceCaps, GraphStats, Planner, RigStats
 from repro.engine import canonical_form, canonical_key, parse
-from repro.engine.planner import (STREAM_CHUNK_MAX, STREAM_CHUNK_MIN)
+from repro.engine.planner import (STREAM_CHUNK_MAX, STREAM_CHUNK_MIN, Plan)
 from repro.testing import given, settings, st
 
 
@@ -297,10 +297,23 @@ def test_batch_group_lanes():
 
 def test_frontier_device_caps_flag():
     s = _stats(2000)
-    planner = Planner(s, caps=DeviceCaps(frontier_device=True))
     q = parse("(a:L0)-/->(b:L1)-//->(c:L2)")
     rig = RigStats()
     rig.observe(rig_nodes=900, rig_edges=4000, sim_passes=2, matching_s=0.0,
                 enumerate_s=0.0, count=100)
-    assert planner.refine(planner.plan(q), q, rig).enum_method == \
+    # estimated resident footprint fits the default device budget: the
+    # frontier upgrade keeps the whole index on device ...
+    planner = Planner(s, caps=DeviceCaps(frontier_device=True))
+    plan = planner.refine(planner.plan(q), q, rig)
+    assert plan.enum_method == "frontier-device-resident"
+    assert plan.small_frontier_rows > 0
+    # on the host backend the resident method batches in the
+    # frontier-device lane (same per-level scheduler, different transport)
+    lane = Plan(backend="host", sim_algo="dagmap", check_method="bitbat",
+                enum_method="frontier-device-resident")
+    assert lane.batch_group() == "frontier-device"
+    # ... while an over-budget estimate falls back to per-level slabs
+    tight = Planner(s, caps=DeviceCaps(frontier_device=True,
+                                       resident_max_bytes=1024))
+    assert tight.refine(tight.plan(q), q, rig).enum_method == \
         "frontier-device"

@@ -144,3 +144,72 @@ def test_intersect_disjoint_rows_count_zero():
     got_rows, got_counts = intersect_pallas(jnp.asarray(a), interpret=True)
     assert not np.asarray(got_rows).any()
     assert not np.asarray(got_counts).any()
+
+
+# --------------------------------------------------------- gather_intersect
+def _gather_ref(matrix, idx):
+    """Numpy oracle: per-row gather + AND-reduce + popcount (uint32)."""
+    rows = matrix[np.asarray(idx)]                     # (F, K, W)
+    acc = rows[:, 0]
+    for i in range(1, rows.shape[1]):
+        acc = acc & rows[:, i]
+    counts = np.array([int(np.unpackbits(
+        r.view(np.uint8)).sum()) for r in acc], dtype=np.int32)
+    return acc, counts
+
+
+@pytest.mark.parametrize("f,k,w", [(1, 1, 128), (5, 2, 128), (16, 3, 256),
+                                   (33, 4, 128)])
+def test_gather_intersect_pallas_vs_ref(f, k, w):
+    from repro.kernels.gather_intersect import (gather_intersect_pallas,
+                                                gather_intersect_xla)
+    rng = np.random.default_rng(f * 100 + k)
+    matrix = rng.integers(0, 1 << 32, size=(40, w), dtype=np.uint32)
+    matrix[-1] = 0                                     # the zero row
+    idx = rng.integers(0, 40, size=(f, k)).astype(np.int32)
+    want_rows, want_counts = _gather_ref(matrix, idx)
+    for fn in (gather_intersect_xla,
+               lambda m, i, w32: gather_intersect_pallas(
+                   m, i, w32=w32, interpret=True)):
+        got_rows, got_counts = fn(jnp.asarray(matrix), jnp.asarray(idx),
+                                  w32=w)
+        got_rows = np.asarray(got_rows)[:f]            # rows stay padded
+        assert np.array_equal(got_rows, want_rows)
+        assert np.array_equal(np.asarray(got_counts)[:f], want_counts)
+
+
+def test_gather_intersect_zero_row_padding_is_inert():
+    """Padded dispatch rows target the all-zero matrix row: their AND and
+    popcount must both be zero, never garbage."""
+    from repro.kernels.gather_intersect import gather_intersect_pallas
+    matrix = np.full((8, 128), 0xFFFFFFFF, dtype=np.uint32)
+    matrix[-1] = 0
+    idx = np.full((3, 2), 7, dtype=np.int32)           # all -> zero row
+    rows, counts = gather_intersect_pallas(jnp.asarray(matrix),
+                                           jnp.asarray(idx), w32=128,
+                                           interpret=True)
+    # the kernel returns padded rows; the caller's contract is [:f]
+    assert not np.asarray(rows)[:3].any()
+    assert not np.asarray(counts)[:3].any()
+
+
+def test_expand_pairs_bit_order_and_limit():
+    """expand_pairs must agree with the host little-endian unpack order
+    and clip to the first `size` pairs (lexicographic pushdown)."""
+    from repro.core import bitset
+    from repro.kernels.gather_intersect import expand_pairs
+    rng = np.random.default_rng(9)
+    n_i = 70                                           # ragged tail
+    w64 = bitset.n_words(n_i)
+    host_rows = rng.integers(0, 1 << 63, size=(6, w64), dtype=np.uint64)
+    host_rows &= bitset.tail_mask(n_i) if hasattr(bitset, "tail_mask") \
+        else host_rows
+    bits = bitset.unpack(host_rows, n_i)
+    want_r, want_c = np.nonzero(bits)
+    rows32 = np.ascontiguousarray(host_rows).view(np.uint32)
+    total = len(want_r)
+    for size in (total, total + 5, max(1, total // 2)):
+        rid, cid = expand_pairs(jnp.asarray(rows32), n_i=n_i, size=size)
+        k = min(size, total)
+        assert np.array_equal(np.asarray(rid)[:k], want_r[:k])
+        assert np.array_equal(np.asarray(cid)[:k], want_c[:k])
