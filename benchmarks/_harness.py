@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -29,10 +30,26 @@ from repro.obs import Span, Tracer, render_trace
 
 __all__ = ["BENCH_SCHEMA_VERSION", "Row", "Measurement", "measure",
            "timeit", "bench_payload", "write_json", "bench_main",
-           "render_trace"]
+           "render_trace", "git_sha"]
 
-# bump when the BENCH_*.json layout changes; version 2 added this field
-BENCH_SCHEMA_VERSION = 2
+# bump when the BENCH_*.json layout changes; version 2 added this field,
+# version 3 added provenance (git_sha + timestamp) for the regression gate
+BENCH_SCHEMA_VERSION = 3
+
+
+def git_sha(short: int = 12) -> str:
+    """Commit SHA of the working tree, or ``"unknown"`` outside a repo.
+
+    Stamped into every baseline so ``BENCH_history.jsonl`` rows are
+    attributable to a commit even after the JSON files are overwritten."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", f"--short={short}", "HEAD"],
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 @dataclass
@@ -90,6 +107,8 @@ def bench_payload(bench: str, mode: str, rows: List[Row]) -> Dict[str, Any]:
         "schema_version": BENCH_SCHEMA_VERSION,
         "bench": bench,
         "mode": mode,
+        "git_sha": git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 1),
                   "derived": r.derived} for r in rows],
     }

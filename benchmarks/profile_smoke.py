@@ -19,19 +19,27 @@ Three checks, designed to run on every CI push:
    under ``--max-governance-overhead`` (default 3%).  Same-process A/B, so
    this gate needs no baseline file and always enforces under
    ``--enforce``;
-4. **device timing attribution** (jax only) — ``DeviceIntersector`` /
+4. **telemetry overhead** — the always-on serving telemetry (one
+   :class:`~repro.obs.QueryEvent` into the flight recorder plus four
+   sketch inserts into the windowed aggregator per request) is A/B'd the
+   same way by toggling ``eng.telemetry`` call-by-call; the armed path
+   must stay under ``--max-telemetry-overhead`` (default 3%), and the
+   recorder's ring is dumped to ``--flight-out`` as a JSONL artifact;
+5. **device timing attribution** (jax only) — ``DeviceIntersector`` /
    ``ResidentIntersector`` must book one-time Pallas/XLA compiles to
    ``compile_s`` and keep ``kernel_s`` as pure fenced per-call device
    time: a repeat dispatch on an already-compiled shape must not grow
    ``compile_s``, and per-call ``kernel_s`` must stay far below the
    shape's compile cost (the regression this guards: the first dispatch
    used to fold its jit into ``kernel_s`` and poison profiles);
-5. **artifact** — the one-shot trace tree plus the measurements land in a
+6. **artifact** — the one-shot trace tree plus the measurements land in a
    versioned JSON file for upload.
 
   PYTHONPATH=src python -m benchmarks.profile_smoke \
       [--baseline BENCH_engine.json] [--out TRACE_profile_smoke.json] \
-      [--max-overhead 0.05] [--max-governance-overhead 0.03]
+      [--flight-out FLIGHT_profile_smoke.jsonl] \
+      [--max-overhead 0.05] [--max-governance-overhead 0.03] \
+      [--max-telemetry-overhead 0.03]
 """
 
 from __future__ import annotations
@@ -92,12 +100,35 @@ def _paired_warm_us(eng, query, budget, repeats: int = 60):
     return gov[len(gov) // 2] * 1e6, ungov[len(ungov) // 2] * 1e6
 
 
+def _paired_telemetry_us(eng, query, repeats: int = 60):
+    """Interleaved telemetry-armed/disarmed warm medians (microseconds),
+    flipping the engine's live ``telemetry`` toggle call-by-call so both
+    variants sample the same noise window."""
+    armed, off = [], []
+    for _ in range(repeats):
+        eng.telemetry = True
+        t0 = time.perf_counter()
+        eng.execute(query)
+        t1 = time.perf_counter()
+        eng.telemetry = False
+        eng.execute(query)
+        t2 = time.perf_counter()
+        armed.append(t1 - t0)
+        off.append(t2 - t1)
+    eng.telemetry = True
+    armed.sort()
+    off.sort()
+    return armed[len(armed) // 2] * 1e6, off[len(off) // 2] * 1e6
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_engine.json",
                     help="bench baseline with an engine_warm_query row, "
                          "produced on THIS machine")
     ap.add_argument("--out", default="TRACE_profile_smoke.json")
+    ap.add_argument("--flight-out", default="FLIGHT_profile_smoke.jsonl",
+                    help="dump the flight recorder's ring here as JSONL")
     ap.add_argument("--max-overhead", type=float, default=0.05,
                     help="max allowed disabled-tracing warm regression "
                          "vs the baseline (fraction)")
@@ -105,6 +136,10 @@ def main() -> int:
                     help="max allowed warm cost of an armed-but-unexercised "
                          "budget vs the ungoverned path (fraction, "
                          "same-process A/B)")
+    ap.add_argument("--max-telemetry-overhead", type=float, default=0.03,
+                    help="max allowed warm cost of the always-on telemetry "
+                         "(event record + window sketches) vs the disarmed "
+                         "path (fraction, same-process A/B)")
     ap.add_argument("--enforce", action="store_true",
                     help="fail (exit 1) when the overhead bound is "
                          "exceeded; default reports only")
@@ -172,7 +207,25 @@ def main() -> int:
           f"(bound {args.max_governance_overhead * 100:.0f}%"
           f"{'' if args.enforce else ', report-only'})")
 
-    # ---- 4. device timing attribution: kernel_s excludes compile --------
+    # ---- 4. telemetry overhead (same-process A/B) -----------------------
+    # same interleaving rationale: the only difference between variants is
+    # the live `telemetry` toggle, i.e. one QueryEvent into the ring plus
+    # four sketch inserts into the current window.
+    tel_us, notel_us = _paired_telemetry_us(eng, QUERY)
+    tel_overhead = tel_us / notel_us - 1.0
+    tel_ok = tel_overhead <= args.max_telemetry_overhead
+    print(f"[profile-smoke] warm telemetry-armed: {tel_us:.1f}us vs "
+          f"disarmed {notel_us:.1f}us -> telemetry overhead "
+          f"{tel_overhead * 100:+.1f}% "
+          f"(bound {args.max_telemetry_overhead * 100:.0f}%"
+          f"{'' if args.enforce else ', report-only'})")
+    if args.flight_out:
+        eng.flight.dump_jsonl(args.flight_out, reason="profile_smoke")
+        print(f"[profile-smoke] wrote {args.flight_out} "
+              f"({len(eng.flight)} events in ring, "
+              f"{len(eng.flight.exemplars()['slowest'])} slow exemplars)")
+
+    # ---- 5. device timing attribution: kernel_s excludes compile --------
     try:
         import numpy as np
 
@@ -203,9 +256,9 @@ def main() -> int:
     print(f"[profile-smoke] warm profiled: {prof_us:.1f}us "
           f"({prof_us / warm_us:.2f}x unprofiled)")
 
-    # ---- 5. artifact ----------------------------------------------------
+    # ---- 6. artifact ----------------------------------------------------
     artifact = {
-        "schema_version": 1,
+        "schema_version": 2,
         "trace": res.trace.to_dict(),
         "warm_unprofiled_us": round(warm_us, 1),
         "warm_profiled_us": round(prof_us, 1),
@@ -215,6 +268,9 @@ def main() -> int:
         "warm_governed_us": round(gov_us, 1),
         "governance_overhead": round(gov_overhead, 4),
         "max_governance_overhead": args.max_governance_overhead,
+        "warm_telemetry_us": round(tel_us, 1),
+        "telemetry_overhead": round(tel_overhead, 4),
+        "max_telemetry_overhead": args.max_telemetry_overhead,
         "count": res.count,
     }
     with open(args.out, "w") as f:
@@ -227,6 +283,8 @@ def main() -> int:
         failed.append("disabled-tracing overhead above bound")
     if not gov_ok:
         failed.append("governance overhead above bound")
+    if not tel_ok:
+        failed.append("telemetry overhead above bound")
     if failed and args.enforce:
         for msg in failed:
             print(f"[profile-smoke] FAIL: {msg}", file=sys.stderr)

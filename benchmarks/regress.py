@@ -1,0 +1,188 @@
+"""Bench regression gate: compare fresh BENCH_*.json rows to a baseline.
+
+Rows are matched by ``name``; each match gets a slowdown ratio
+``fresh_us / base_us - 1`` and a verdict:
+
+* ``ok``            — within the tolerance band (or faster)
+* ``fail``          — an *asserted* row slowed past ``--tolerance``
+* ``informational`` — a non-asserted row (or any row when the baseline
+  and fresh run used different modes — a committed ``--full`` baseline
+  cannot gate a CI ``--quick`` run, so the whole comparison downgrades)
+* ``new`` / ``missing`` — a row present on only one side
+
+Only asserted rows (``--assert-rows a,b``) can fail the gate; everything
+else is reported for trend-watching.  Rows whose baseline time sits under
+``--min-us`` are never failed either — at a few microseconds per call the
+ratio is timer noise, not regression signal.  Every comparison can append
+one JSONL line (ts, git_sha, bench, mode, per-row timings + verdicts) to
+``BENCH_history.jsonl`` so CI accumulates a perf trajectory across
+commits even though the JSON baselines are point-in-time snapshots.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.regress \
+        --baseline BENCH_engine.json --fresh BENCH_engine_fresh.json \
+        --assert-rows engine_warm_query,engine_many_vs_loop \
+        --tolerance 2.0 --history BENCH_history.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from ._harness import git_sha
+
+__all__ = ["load_payload", "compare", "append_history", "main"]
+
+HISTORY_SCHEMA_VERSION = 1
+
+
+def load_payload(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        payload = json.load(f)
+    if "rows" not in payload:
+        raise ValueError(f"{path}: not a BENCH payload (no 'rows')")
+    return payload
+
+
+def _row_map(payload: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def compare(baseline: Dict[str, Any], fresh: Dict[str, Any], *,
+            tolerance: float = 0.5,
+            assert_rows: Sequence[str] = (),
+            min_us: float = 50.0) -> Dict[str, Any]:
+    """Compare two BENCH payloads; returns a report dict.
+
+    ``tolerance`` is the allowed fractional slowdown for asserted rows
+    (0.5 = fresh may be up to 50% slower than baseline).  ``min_us`` is a
+    noise floor: asserted rows whose baseline is faster than this are
+    reported but cannot fail.
+    """
+    base_rows = _row_map(baseline)
+    fresh_rows = _row_map(fresh)
+    mode_mismatch = baseline.get("mode") != fresh.get("mode")
+    asserted = set(assert_rows)
+
+    rows: List[Dict[str, Any]] = []
+    failures: List[str] = []
+    for name in list(base_rows) + [n for n in fresh_rows
+                                   if n not in base_rows]:
+        b = base_rows.get(name)
+        f = fresh_rows.get(name)
+        row: Dict[str, Any] = {"name": name}
+        if b is None:
+            row.update(verdict="new", fresh_us=f["us_per_call"])
+        elif f is None:
+            row.update(verdict="missing", base_us=b["us_per_call"])
+            if name in asserted and not mode_mismatch:
+                row["verdict"] = "fail"
+                failures.append(f"{name}: asserted row missing from fresh run")
+        else:
+            base_us = b["us_per_call"]
+            fresh_us = f["us_per_call"]
+            slowdown = (fresh_us / base_us - 1.0) if base_us > 0 else 0.0
+            row.update(base_us=base_us, fresh_us=fresh_us,
+                       slowdown=round(slowdown, 4))
+            gated = (name in asserted and not mode_mismatch
+                     and base_us >= min_us)
+            if slowdown <= tolerance:
+                row["verdict"] = "ok"
+            elif gated:
+                row["verdict"] = "fail"
+                failures.append(
+                    f"{name}: {base_us:.1f}us -> {fresh_us:.1f}us "
+                    f"(+{slowdown * 100:.0f}%, tolerance "
+                    f"+{tolerance * 100:.0f}%)")
+            else:
+                row["verdict"] = "informational"
+        rows.append(row)
+
+    return {
+        "bench": fresh.get("bench", baseline.get("bench", "?")),
+        "mode": fresh.get("mode", "?"),
+        "baseline_mode": baseline.get("mode", "?"),
+        "mode_mismatch": mode_mismatch,
+        "tolerance": tolerance,
+        "min_us": min_us,
+        "asserted": sorted(asserted),
+        "rows": rows,
+        "failures": failures,
+        "ok": not failures,
+    }
+
+
+def append_history(path: str, report: Dict[str, Any],
+                   fresh: Dict[str, Any]) -> Dict[str, Any]:
+    """Append one JSONL trajectory line for this comparison."""
+    line = {
+        "schema_version": HISTORY_SCHEMA_VERSION,
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": fresh.get("git_sha") or git_sha(),
+        "bench": report["bench"],
+        "mode": report["mode"],
+        "ok": report["ok"],
+        "mode_mismatch": report["mode_mismatch"],
+        "rows": [{k: r[k] for k in
+                  ("name", "verdict", "base_us", "fresh_us", "slowdown")
+                  if k in r}
+                 for r in report["rows"]],
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    return line
+
+
+def _print_report(report: Dict[str, Any]) -> None:
+    head = (f"[regress] bench={report['bench']} "
+            f"mode={report['baseline_mode']}->{report['mode']} "
+            f"tolerance=+{report['tolerance'] * 100:.0f}%")
+    if report["mode_mismatch"]:
+        head += "  (mode mismatch: all rows informational)"
+    print(head)
+    for r in report["rows"]:
+        base = f"{r['base_us']:>10.1f}" if "base_us" in r else " " * 10
+        fresh = f"{r['fresh_us']:>10.1f}" if "fresh_us" in r else " " * 10
+        delta = (f"{r['slowdown'] * 100:+7.1f}%"
+                 if "slowdown" in r else " " * 8)
+        print(f"  {r['name']:<28} {base} {fresh} {delta}  {r['verdict']}")
+    for msg in report["failures"]:
+        print(f"[regress] FAIL {msg}")
+    if report["ok"]:
+        print("[regress] PASS")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json to compare against")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional slowdown (0.5 = +50%%)")
+    ap.add_argument("--assert-rows", default="",
+                    help="comma-separated row names that may fail the gate")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="baseline noise floor; faster rows never fail")
+    ap.add_argument("--history", default="",
+                    help="append a JSONL trajectory line to this path")
+    args = ap.parse_args(argv)
+
+    baseline = load_payload(args.baseline)
+    fresh = load_payload(args.fresh)
+    assert_rows = [r for r in args.assert_rows.split(",") if r]
+    report = compare(baseline, fresh, tolerance=args.tolerance,
+                     assert_rows=assert_rows, min_us=args.min_us)
+    _print_report(report)
+    if args.history:
+        append_history(args.history, report, fresh)
+        print(f"[regress] appended trajectory line to {args.history}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

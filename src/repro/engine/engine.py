@@ -43,9 +43,12 @@ from ..core.graph import DataGraph
 from ..core.matcher import GM, MatchResult, MatchStream
 from ..core.mjoin import DEFAULT_LIMIT, device_intersector
 from ..core.query import PatternQuery
+from ..obs.events import QueryEvent
 from ..obs.export import prometheus_text, render_trace
+from ..obs.flight import FlightRecorder
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_TRACER, Span, Tracer
+from ..obs.window import WindowedAggregator
 from ..robust import Budget, CircuitBreaker
 from ..robust.errors import (BreakerOpen, DeadlineExceeded, DeviceFailure,
                              QueryError, TransientError)
@@ -108,6 +111,15 @@ class EngineOptions:
     # device dispatch this engine issues)
     budget: Optional[Budget] = None
     breaker: Optional[CircuitBreaker] = None
+    # serving telemetry (PR 9): always-on per-request event records in a
+    # bounded flight recorder plus windowed QPS/error-rate/quantile series.
+    # ``telemetry=False`` disables recording entirely (the A/B lever for
+    # the profile-smoke overhead gate; the recorder objects still exist).
+    telemetry: bool = True
+    flight_capacity: int = 2048
+    exemplar_k: int = 8              # slowest-k full-trace exemplars
+    window_s: float = 10.0           # sliding-window width (seconds)
+    n_windows: int = 6               # closed windows retained
 
     def caps(self) -> DeviceCaps:
         fd = self.frontier_device
@@ -150,6 +162,7 @@ class EngineStats:
     # taken (host-intersect / chunked-slabs / backtrack / host) in order;
     # ``attempts`` counts executions including transient-failure retries.
     status: str = "ok"
+    error_type: str = ""             # exception class when status != "ok"
     partial: bool = False
     deadline_exceeded: bool = False
     degradations: List[str] = field(default_factory=list)
@@ -272,6 +285,8 @@ class EngineStream:
             tr.add("materialize", streamed=True, chunks=self.stats.chunks,
                    chunk_size=self.stats.chunk_size)
             self.trace = tr.finish()
+        self.engine._record_event(self.stats, self.key, m.count,
+                                  trace_root=self.trace)
 
 
 @dataclass
@@ -428,10 +443,22 @@ class Engine:
         self._canon_memo.bind_metrics(self.metrics, "canon")
         self.default_graph = graph
         self.counters = _CounterView(self.metrics)
+        # serving telemetry (PR 9): one bounded flight recorder + one
+        # sliding-window aggregator per engine, armed on every request in
+        # all three execution modes.  ``telemetry`` is a live toggle (the
+        # profile-smoke overhead gate flips it for same-process A/B).
+        self.telemetry = self.options.telemetry
+        self.flight = FlightRecorder(capacity=self.options.flight_capacity,
+                                     exemplar_k=self.options.exemplar_k)
+        self.windows = WindowedAggregator(window_s=self.options.window_s,
+                                          n_windows=self.options.n_windows)
         # one breaker per engine, shared by every device dispatch and
-        # mirrored into engine_breaker_state / engine_device_retries
+        # mirrored into engine_breaker_state / engine_device_retries;
+        # state transitions also land in the flight recorder (a transition
+        # to open triggers the armed auto-dump)
         self.breaker = (self.options.breaker or CircuitBreaker())
         self.breaker.bind_metrics(self.metrics)
+        self.breaker.bind_recorder(self.flight)
         self._qid = itertools.count(1)
         # histogram objects held directly: the hot path must not pay a
         # registry lookup per observation
@@ -731,6 +758,48 @@ class Engine:
         self._h_total.observe(stats.total_s)
         self.counters["queries"] += 1
 
+    @staticmethod
+    def _exemplar_trace(stats: EngineStats, root: Optional[Span]):
+        """Span tree for a tail-sampled exemplar: the real lifecycle tree
+        when the query was profiled, otherwise one synthesized from the
+        phase timings every query measures anyway — so slow/failed
+        requests always carry *some* tree without ``profile=True``
+        overhead on the rest of the traffic."""
+        if root is not None:
+            return root.to_dict()
+        attrs = {"status": stats.status, "backend": stats.backend,
+                 "synthesized": True}
+        if stats.error_type:
+            attrs["error"] = stats.error_type
+        return {
+            "name": "query", "duration_s": stats.total_s, "attrs": attrs,
+            "children": [
+                {"name": "parse", "duration_s": stats.parse_s},
+                {"name": "plan", "duration_s": stats.plan_s},
+                {"name": "exec", "duration_s": stats.exec_s,
+                 "attrs": {"enum_method": stats.enum_method,
+                           "degradations": list(stats.degradations)}},
+            ],
+        }
+
+    def _record_event(self, stats: EngineStats, key: str, count: int,
+                      trace_root: Optional[Span] = None) -> None:
+        """Serving telemetry for one finished request (every execution
+        mode funnels through here): one structured event in the flight
+        recorder — with tail-based exemplar consideration — plus the
+        phase observations for the windowed QPS/error-rate/quantile
+        series.  A no-op when ``self.telemetry`` is off."""
+        if not self.telemetry:
+            return
+        ev = QueryEvent.from_stats(stats, key=key, count=count)
+        self.flight.record_query(
+            ev, trace_provider=lambda: self._exemplar_trace(stats,
+                                                            trace_root))
+        self.windows.observe(
+            {"parse": stats.parse_s, "plan": stats.plan_s,
+             "exec": stats.exec_s, "total": stats.total_s},
+            error=stats.status != "ok")
+
     def _ensure_labels(self, res: _Resident, stats: EngineStats,
                        trace=NULL_TRACER, budget=None) -> None:
         """Label-cache access with its lifecycle span (per-phase children
@@ -816,6 +885,7 @@ class Engine:
             if b is not None and b.raise_on_error:
                 raise
             stats.status = e.status
+            stats.error_type = type(e).__name__
             stats.partial = True
             if isinstance(e, DeadlineExceeded):
                 stats.deadline_exceeded = True
@@ -827,6 +897,9 @@ class Engine:
         if root is not None:
             root.set(key=key, backend=stats.backend, count=count,
                      status=stats.status)
+            if stats.error_type:
+                root.set(error=stats.error_type)
+        self._record_event(stats, key, count, trace_root=root)
         return EngineResult(count=count, tuples=tuples, query=qr,
                             plan=entry.plan, stats=stats, key=key,
                             trace=root)
@@ -1088,6 +1161,7 @@ class Engine:
                 if b is not None and b.raise_on_error:
                     raise
                 stats.status = e.status
+                stats.error_type = type(e).__name__
                 stats.partial = True
                 if isinstance(e, DeadlineExceeded):
                     stats.deadline_exceeded = True
@@ -1114,6 +1188,7 @@ class Engine:
                 stats.enum_method = src.stats.enum_method
                 # shared answers share the representative's outcome too
                 stats.status = src.stats.status
+                stats.error_type = src.stats.error_type
                 stats.partial = src.stats.partial
                 stats.deadline_exceeded = src.stats.deadline_exceeded
                 stats.degradations = list(src.stats.degradations)
@@ -1133,6 +1208,13 @@ class Engine:
                     count=src.count, tuples=None, query=qr, plan=entry.plan,
                     stats=stats, key=key,
                     trace=self._finish_trace(tr, key, stats, src.count))
+
+        # serving telemetry: one event per batch member (duplicates too —
+        # a served request is a served request), emitted after the whole
+        # group resolved so shared answers carry their final stats
+        for i in idxs:
+            r = results[i]
+            self._record_event(r.stats, r.key, r.count, trace_root=r.trace)
 
     # ------------------------------------------------------------- insight
     def metrics_snapshot(self, prefix: Optional[str] = None

@@ -29,11 +29,18 @@ Production behaviours:
 * **observability** — ``profile=True`` records one lifecycle span tree per
   request (``Request.trace``); server counters live in the engine's
   metrics registry (``server_*`` series), so ``metrics_text()`` is one
-  Prometheus-style dump covering engine, caches and server.
+  Prometheus-style dump covering engine, caches and server.  The engine's
+  always-on serving telemetry rides along: every request (and every
+  server-side rejection / journal re-dispatch / give-up) lands in the
+  bounded flight recorder, ``--stats-interval N`` prints a windowed
+  QPS/p50/p95/p99/error-rate line every N seconds, and ``--flight-dump
+  PATH`` writes the JSONL dump at exit (incident auto-dumps — breaker
+  open, deadline-rate spike — are armed to the same path).
 
 Usage:
   python -m repro.launch.serve --n-queries 64 --graph-nodes 2000 \
-      [--deadline-ms 50] [--profile] [--metrics]
+      [--deadline-ms 50] [--profile] [--metrics] \
+      [--stats-interval 2] [--flight-dump FLIGHT_serve.jsonl]
 """
 
 from __future__ import annotations
@@ -48,7 +55,7 @@ from ..data.graphs import random_labeled_graph
 from ..data.queries import random_query_from_graph
 from ..engine import Engine, EngineOptions, QueryParseError, render_trace
 from ..engine.engine import _CounterView
-from ..obs import Span
+from ..obs import ServerEvent, Span
 from ..robust import Budget, InjectedFault, TransientError, faults
 
 _SERVER_COUNTERS = ("served", "redispatched", "rejected", "failed",
@@ -101,10 +108,26 @@ class QueryServer:
         # surface (stats["served"] += 1) is unchanged
         self.stats = _CounterView(self.engine.metrics,
                                   names=_SERVER_COUNTERS, prefix="server_")
+        # server-side lifecycle actions (rejections, journal re-dispatches,
+        # terminal give-ups) land in the engine's flight recorder next to
+        # the per-request query events, so one dump tells the whole story
+        self.flight = self.engine.flight
 
     def metrics_text(self) -> str:
         """Prometheus-style dump of engine + cache + server series."""
         return self.engine.metrics_text()
+
+    def stats_line(self) -> str:
+        """One windowed-telemetry summary line (QPS, error rate,
+        p50/p95/p99 of total latency) from the engine's sliding windows."""
+        return self.engine.windows.summary_line()
+
+    def _record_server_event(self, action: str, r: "Request",
+                             detail: str = "") -> None:
+        if self.engine.telemetry:
+            self.flight.record(ServerEvent(action=action, rid=r.rid,
+                                           attempts=r.attempts,
+                                           detail=detail or r.error))
 
     def submit(self, rid: int, query: Union[str, PatternQuery]) -> bool:
         """Journal a request.  Admission control happens here: malformed
@@ -116,6 +139,9 @@ class QueryServer:
             self.rejected[rid] = (f"queue full ({self.queue_limit} pending "
                                   f"requests); resubmit later")
             self.stats["rejected"] += 1
+            if self.engine.telemetry:
+                self.flight.record(ServerEvent(action="reject", rid=rid,
+                                               detail=self.rejected[rid]))
             return False
         if isinstance(query, str):
             try:
@@ -123,6 +149,9 @@ class QueryServer:
             except QueryParseError as e:
                 self.rejected[rid] = str(e)
                 self.stats["rejected"] += 1
+                if self.engine.telemetry:
+                    self.flight.record(ServerEvent(action="reject", rid=rid,
+                                                   detail="parse error"))
                 return False
         self.journal[rid] = Request(rid=rid, query=query)
         return True
@@ -140,6 +169,7 @@ class QueryServer:
                 r.error = (r.error
                            or f"gave up after {r.attempts} attempt(s)")
                 self.stats["failed"] += 1
+                self._record_server_event("failed", r)
                 continue
             out.append(r)
         return out
@@ -156,12 +186,16 @@ class QueryServer:
             r.attempts += 1
         if fail:                              # worker loss: nothing returns
             self.stats["redispatched"] += len(batch)
+            for r in batch:
+                self._record_server_event("redispatch", r,
+                                          detail="simulated worker loss")
             return 0
         try:
             faults.maybe_fail("journal_dispatch")
         except InjectedFault as e:            # simulated worker death
             for r in batch:
                 r.error = str(e)
+                self._record_server_event("redispatch", r)
             self.stats["redispatched"] += len(batch)
             return 0
         t0 = time.monotonic()
@@ -174,6 +208,7 @@ class QueryServer:
             # still journaled, so the next step recomputes them
             for r in batch:
                 r.error = str(e)
+                self._record_server_event("redispatch", r)
             self.stats["redispatched"] += len(batch)
             return 0
         dt = time.monotonic() - t0
@@ -185,6 +220,8 @@ class QueryServer:
             self.stats["redispatched"] += len(batch)
             for r in batch:
                 r.attempts -= 1
+                self._record_server_event("redispatch", r,
+                                          detail="straggler batch split")
             return 0
         served = 0
         for r, res in zip(batch, results):
@@ -195,6 +232,7 @@ class QueryServer:
                 # terminal once max_attempts is hit)
                 r.error = "transient engine failure"
                 self.stats["redispatched"] += 1
+                self._record_server_event("redispatch", r)
                 continue
             # everything else — including a deadline partial — is terminal:
             # re-running the same budget would blow the same deadline
@@ -233,6 +271,15 @@ def main() -> None:
     ap.add_argument("--metrics", action="store_true",
                     help="print the Prometheus-style metrics dump "
                          "after draining")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="print a windowed QPS/p50/p95/p99/error-rate "
+                         "summary line every N seconds while serving "
+                         "(0 = off)")
+    ap.add_argument("--flight-dump", default=None, metavar="PATH",
+                    help="dump the flight recorder (per-request event "
+                         "records + tail-sampled exemplars) as JSONL "
+                         "after draining; incident auto-dumps are armed "
+                         "to the same path while serving")
     args = ap.parse_args()
 
     graph = random_labeled_graph(args.graph_nodes, avg_degree=3.0,
@@ -241,6 +288,8 @@ def main() -> None:
               if args.deadline_ms > 0 else None)
     server = QueryServer(graph, batch_size=args.batch_size,
                          profile=args.profile, budget=budget)
+    if args.flight_dump:
+        server.flight.arm_autodump(args.flight_dump)
     qtypes = ["C", "H", "D"]
     n = 0
     for i in range(args.n_queries):
@@ -248,8 +297,20 @@ def main() -> None:
                                     seed=args.seed + i)
         n += int(server.submit(i, q))
     t0 = time.monotonic()
-    server.drain()
+    next_stats = (t0 + args.stats_interval if args.stats_interval > 0
+                  else None)
+    for _ in range(100):                      # bounded drain with stats
+        if not server._pending():
+            break
+        server.step()
+        now = time.monotonic()
+        if next_stats is not None and now >= next_stats:
+            print(f"[serve] {server.stats_line()}")
+            next_stats = now + args.stats_interval
+    server.drain()                            # final sweep / give-ups
     dt = time.monotonic() - t0
+    if args.stats_interval > 0:
+        print(f"[serve] {server.stats_line()}")
     counts = [server.journal[i].count for i in sorted(server.journal)]
     print(f"[serve] {n} queries in {dt:.2f}s "
           f"({n / max(dt, 1e-9):.1f} qps) stats={server.stats} "
@@ -264,6 +325,10 @@ def main() -> None:
     if args.metrics:
         print("[serve] --- metrics ---")
         print(server.metrics_text())
+    if args.flight_dump:
+        lines = server.flight.dump_jsonl(args.flight_dump, reason="exit")
+        print(f"[serve] wrote flight-recorder dump: {args.flight_dump} "
+              f"({lines} lines, {server.flight.recorded} recorded)")
 
 
 if __name__ == "__main__":

@@ -73,7 +73,15 @@ def render_trace(span: Optional[Span], max_attrs: int = 6) -> str:
 
 
 def prometheus_text(registry: MetricsRegistry) -> str:
-    """Prometheus-style text exposition (sorted, stable)."""
+    """Prometheus-style text exposition (sorted, stable).
+
+    Histograms emit the full conformant family — cumulative ``_bucket``
+    series ending in the mandatory ``le="+Inf"`` (equal to ``_count``),
+    plus ``_sum`` and ``_count`` — and additionally ``_quantile`` gauge
+    lines carrying the bucket-interpolated p50/p95/p99 estimates, so a
+    scrape-less consumer (the CI artifact, a log line) gets latency
+    quantiles without doing ``histogram_quantile`` itself.  Label values
+    are exposition-escaped by :func:`~repro.obs.metrics.metric_key`."""
     lines: List[str] = []
     metrics = sorted(registry, key=lambda m: (m.name, m.labels))
     seen_type = set()
@@ -95,6 +103,16 @@ def prometheus_text(registry: MetricsRegistry) -> str:
                          f"{m.total:g}")
             lines.append(f"{metric_key(m.name + '_count', m.labels)} "
                          f"{m.count}")
+            qname = m.name + "_quantile"
+            for q in (0.5, 0.95, 0.99):
+                v = m.quantile(q)
+                if v is None:          # empty histogram: no quantile family
+                    continue
+                if qname not in seen_type:
+                    lines.append(f"# TYPE {qname} gauge")
+                    seen_type.add(qname)
+                labels = m.labels + (("quantile", f"{q:g}"),)
+                lines.append(f"{metric_key(qname, labels)} {v:g}")
         else:
             v = m.value
             lines.append(f"{m.key()} {v:g}" if isinstance(v, float)

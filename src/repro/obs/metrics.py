@@ -21,17 +21,25 @@ import threading
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "REGISTRY", "get_registry", "metric_key"]
+           "REGISTRY", "get_registry", "metric_key", "escape_label_value"]
 
 LabelItems = Tuple[Tuple[str, str], ...]
 
 
+def escape_label_value(v: str) -> str:
+    """Prometheus text-exposition escaping for label values: backslash,
+    double-quote and newline must be escaped or the series line is
+    unparseable (canonical query keys can contain any of them)."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def metric_key(name: str, labels: LabelItems) -> str:
     """Prometheus-style series key: ``name{k="v",...}`` (no braces when
-    unlabeled)."""
+    unlabeled); label values are exposition-escaped."""
     if not labels:
         return name
-    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    inner = ",".join(f'{k}="{escape_label_value(v)}"' for k, v in labels)
     return f"{name}{{{inner}}}"
 
 
@@ -118,10 +126,40 @@ class Histogram:
     def key(self) -> str:
         return metric_key(self.name, self.labels)
 
+    def quantile(self, q: float) -> Optional[float]:
+        """Bucket-interpolated quantile estimate (``None`` when empty).
+
+        Linear interpolation inside the winning cumulative bucket, with
+        both bucket edges clamped to the *observed* ``[vmin, vmax]`` — so
+        a single-sample histogram reports the sample itself, and the
+        decade-wide default buckets can't report a value outside the data.
+        For guaranteed relative error use
+        :class:`repro.obs.sketch.QuantileSketch`; this estimate's error is
+        bounded by the bucket width."""
+        if self.count == 0:
+            return None
+        q = min(1.0, max(0.0, q))
+        rank = q * self.count
+        cum = 0
+        lower = self.vmin
+        for i, b in enumerate(self.buckets):
+            c = self.bucket_counts[i]
+            if c and cum + c >= rank:
+                lo = max(lower, self.vmin)
+                hi = min(b, self.vmax)
+                if hi < lo:
+                    hi = lo
+                return lo + (hi - lo) * ((rank - cum) / c)
+            cum += c
+            lower = b
+        return self.vmax                       # +Inf overflow bucket
+
     def summary(self) -> Dict[str, Any]:
         return {"count": self.count, "sum": self.total, "mean": self.mean,
                 "min": None if self.count == 0 else self.vmin,
-                "max": None if self.count == 0 else self.vmax}
+                "max": None if self.count == 0 else self.vmax,
+                "p50": self.quantile(0.5), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
 
 
 class MetricsRegistry:

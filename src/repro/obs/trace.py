@@ -55,8 +55,17 @@ class Span:
             self._tracer._push(self)
         return self
 
-    def __exit__(self, *exc) -> bool:
+    def __exit__(self, exc_type=None, exc=None, tb=None) -> bool:
         self.t1 = time.perf_counter()
+        if exc_type is not None:
+            # a span terminated by an exception carries its cause: the
+            # class name plus — for the typed QueryError taxonomy — the
+            # stable status string, so failed-request exemplars and
+            # error-tagged traces explain themselves
+            self.attrs["error"] = exc_type.__name__
+            status = getattr(exc, "status", None)
+            if isinstance(status, str):
+                self.attrs["status"] = status
         if self._tracer is not None:
             self._tracer._pop(self)
         return False

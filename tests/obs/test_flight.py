@@ -1,0 +1,314 @@
+"""Flight-recorder tests: ring bounds, tail-based exemplar sampling,
+JSONL dumps, incident auto-dumps, and the always-on engine/server
+telemetry threading (one event per request in every execution mode)."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.data.graphs import random_labeled_graph
+from repro.data.queries import random_query_from_graph
+from repro.engine import Engine, EngineOptions
+from repro.obs import FlightRecorder, QueryEvent
+from repro.obs.events import ServerEvent
+
+
+def qe(total_s=0.001, status="ok", deadline=False, **kw):
+    return QueryEvent(total_s=total_s, status=status,
+                      deadline_exceeded=deadline, **kw)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# ------------------------------------------------------------- ring buffer
+class TestRing:
+    def test_bounded_capacity_keeps_newest(self):
+        fr = FlightRecorder(capacity=4)
+        for i in range(10):
+            fr.record_query(qe(query_id=i))
+        assert len(fr) == 4
+        assert [e["query_id"] for e in fr.events()] == [6, 7, 8, 9]
+        assert fr.recorded == 10            # lifetime count survives wrap
+
+    def test_mixed_event_kinds(self):
+        fr = FlightRecorder()
+        fr.record_query(qe())
+        fr.record(ServerEvent(action="reject", rid=3))
+        kinds = [e["kind"] for e in fr.events()]
+        assert kinds == ["query", "server"]
+
+
+# --------------------------------------------------------------- exemplars
+class TestExemplars:
+    def test_slowest_k_retained(self):
+        fr = FlightRecorder(exemplar_k=3)
+        for i in range(20):
+            fr.record_query(qe(total_s=0.001 * (i + 1), query_id=i))
+        slow = fr.exemplars()["slowest"]
+        assert [s["event"]["query_id"] for s in slow] == [19, 18, 17]
+        assert slow[0]["total_s"] == pytest.approx(0.020)
+
+    def test_failed_always_retained(self):
+        fr = FlightRecorder(exemplar_k=2, max_failed_exemplars=4)
+        for i in range(6):
+            fr.record_query(qe(total_s=1e-6, status="injected_fault",
+                               query_id=i))
+        failed = fr.exemplars()["failed"]
+        assert len(failed) == 4             # bounded, newest kept
+        assert [f["event"]["query_id"] for f in failed] == [2, 3, 4, 5]
+
+    def test_trace_provider_called_lazily(self):
+        calls = []
+
+        def provider():
+            calls.append(1)
+            return {"name": "query"}
+
+        fr = FlightRecorder(exemplar_k=1)
+        fr.record_query(qe(total_s=1.0), trace_provider=provider)
+        assert len(calls) == 1              # admitted: provider ran
+        fr.record_query(qe(total_s=0.001), trace_provider=provider)
+        assert len(calls) == 1              # too fast: provider skipped
+        fr.record_query(qe(total_s=0.5, status="transient"),
+                        trace_provider=provider)
+        assert len(calls) == 2              # failed: always an exemplar
+        assert fr.exemplars()["slowest"][0]["trace"] == {"name": "query"}
+
+
+# ------------------------------------------------------------------- dumps
+class TestDumps:
+    def test_dump_jsonl_roundtrip(self, tmp_path):
+        fr = FlightRecorder(exemplar_k=2)
+        for i in range(5):
+            fr.record_query(qe(total_s=0.001 * (i + 1), query_id=i))
+        fr.record_query(qe(status="deadline_exceeded", deadline=True))
+        path = tmp_path / "flight.jsonl"
+        lines = fr.dump_jsonl(str(path), reason="test")
+        recs = [json.loads(line) for line in path.read_text().splitlines()]
+        assert len(recs) == lines
+        meta = recs[0]
+        assert meta["kind"] == "meta" and meta["reason"] == "test"
+        assert meta["events"] == 6
+        events = [r for r in recs if r["kind"] == "query"]
+        assert len(events) == 6
+        ex = [r for r in recs if r["kind"] == "exemplar"]
+        assert {r["class"] for r in ex} == {"slowest", "failed"}
+        assert fr.last_dump_reason == "test"
+
+    def test_autodump_debounce(self, tmp_path):
+        clk = FakeClock()
+        fr = FlightRecorder(min_dump_interval_s=30.0, clock=clk)
+        path = tmp_path / "auto.jsonl"
+        assert not fr.maybe_autodump("x")       # not armed: no-op
+        fr.arm_autodump(str(path))
+        assert fr.maybe_autodump("breaker_open")
+        assert not fr.maybe_autodump("breaker_open")   # debounced
+        clk.t += 31.0
+        assert fr.maybe_autodump("breaker_open")
+        assert fr.autodumps == 2
+
+    def test_deadline_rate_spike_triggers_autodump(self, tmp_path):
+        fr = FlightRecorder(deadline_rate_threshold=0.5, rate_window=8,
+                            rate_min_events=8)
+        path = tmp_path / "spike.jsonl"
+        fr.arm_autodump(str(path))
+        for _ in range(8):
+            fr.record_query(qe())
+        assert fr.autodumps == 0
+        # half the recent window blows its deadline -> spike
+        for _ in range(4):
+            fr.record_query(qe(status="deadline_exceeded", deadline=True))
+        assert fr.autodumps == 1
+        assert fr.deadline_rate() == pytest.approx(0.5)
+        meta = json.loads(path.read_text().splitlines()[0])
+        assert meta["reason"] == "deadline_rate_spike"
+
+    def test_rate_window_is_sliding(self):
+        fr = FlightRecorder(rate_window=4, rate_min_events=4)
+        for _ in range(4):
+            fr.record_query(qe(deadline=True, status="deadline_exceeded"))
+        assert fr.deadline_rate() == 1.0
+        for _ in range(4):
+            fr.record_query(qe())
+        assert fr.deadline_rate() == 0.0    # old flags aged out exactly
+
+
+# ------------------------------------------------------- engine threading
+@pytest.fixture
+def engine():
+    g = random_labeled_graph(250, avg_degree=3.0, n_labels=6, seed=3)
+    return Engine(g, options=EngineOptions(device_min_nodes=10 ** 9)), g
+
+
+def _query(g, seed=5, n=4):
+    return random_query_from_graph(g, n, qtype="H", seed=seed)
+
+
+class TestEngineTelemetry:
+    def test_all_three_modes_emit_events(self, engine):
+        eng, g = engine
+        q = _query(g)
+        r = eng.execute(q)
+        assert len(eng.flight) == 1
+        s = eng.execute_stream(q, chunk_size=16)
+        assert len(eng.flight) == 1         # stream event lands at finalize
+        total = sum(len(c) for c in s)
+        assert len(eng.flight) == 2
+        eng.execute_many([q, _query(g, seed=6, n=3), q])
+        events = eng.flight.events()
+        assert len(events) == 5             # duplicates get their own events
+        assert all(e["kind"] == "query" for e in events)
+        one, stream = events[0], events[1]
+        assert one["count"] == r.count and one["status"] == "ok"
+        assert one["key"] and one["backend"] == "host"
+        assert stream["streamed"] is True and stream["count"] == total
+        assert any(e["shared_exec"] for e in events[2:])
+        # the windows saw the same five requests
+        assert eng.windows.summary()["merged"]["requests"] == 5
+        assert eng.windows.summary()["merged"]["series"]["total"]["count"] \
+            == 5
+
+    def test_telemetry_toggle_disables_recording(self, engine):
+        eng, g = engine
+        eng.flight.events()                  # materialize (no-op) then count
+        before = len(eng.flight)
+        eng.telemetry = False
+        try:
+            eng.execute(_query(g, seed=7))
+        finally:
+            eng.telemetry = True
+        assert len(eng.flight) == before
+
+    def test_failed_query_event_has_error_type(self):
+        from repro.robust import faults
+
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=7)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        with faults.inject(faults.every("label_build", 1)):
+            res = eng.execute("(a:L0)-/->(b:L1)")
+        faults.uninstall()
+        assert res.stats.status == "injected_fault"
+        ev = eng.flight.events()[-1]
+        assert ev["status"] == "injected_fault"
+        assert ev["error_type"] == "InjectedFault"
+        # failed requests are always exemplars, with a span tree attached
+        failed = eng.flight.exemplars()["failed"]
+        assert len(failed) == 1
+        assert failed[0]["trace"]["attrs"]["status"] == "injected_fault"
+
+    def test_exemplar_trace_synthesized_when_unprofiled(self, engine):
+        eng, g = engine
+        eng.execute(_query(g, seed=11))
+        slow = eng.flight.exemplars()["slowest"]
+        assert slow
+        tree = slow[0]["trace"]
+        assert tree["name"] == "query"
+        assert tree["attrs"]["synthesized"] is True
+        assert {c["name"] for c in tree["children"]} \
+            <= {"parse", "plan", "exec"}
+
+    def test_exemplar_trace_real_when_profiled(self):
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=9)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        eng.execute(_query(g, seed=8, n=3), profile=True)
+        tree = eng.flight.exemplars()["slowest"][0]["trace"]
+        assert "synthesized" not in tree.get("attrs", {})
+        assert {c["name"] for c in tree["children"]} >= {"parse", "plan",
+                                                         "labels", "rig"}
+
+    def test_breaker_transitions_land_in_recorder(self, tmp_path):
+        from repro.engine import CircuitBreaker
+        from repro.robust import faults
+
+        g = random_labeled_graph(300, avg_degree=3.0, n_labels=4, seed=2)
+        br = CircuitBreaker(sleep=lambda s: None, failure_threshold=3)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=0,
+                                              materialize=False,
+                                              force_backend="device",
+                                              breaker=br))
+        path = tmp_path / "incident.jsonl"
+        eng.flight.arm_autodump(str(path))
+        with faults.inject(faults.every("device_dispatch", 1)):
+            eng.execute("(a:L0)-/->(b:L1)")
+        faults.uninstall()
+        kinds = [e["kind"] for e in eng.flight.events()]
+        assert "breaker" in kinds
+        trans = [e for e in eng.flight.events() if e["kind"] == "breaker"]
+        assert trans[-1]["new_state"] == "open"
+        # the open transition auto-dumped the ring
+        assert path.exists()
+        meta = json.loads(path.read_text().splitlines()[0])
+        assert meta["reason"] == "breaker_open"
+
+
+# --------------------------------------------------------- server threading
+class TestServerTelemetry:
+    def _server(self, **kw):
+        from repro.launch.serve import QueryServer
+
+        g = random_labeled_graph(200, avg_degree=3.0, n_labels=4, seed=3)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9,
+                                              materialize=False))
+        return QueryServer(g, engine=eng, **kw), g
+
+    def test_chaos_run_drops_no_records(self):
+        """Under injected worker deaths every request still resolves
+        terminally, and the recorder holds one query event per engine
+        execution plus a server event per redispatch/give-up."""
+        from repro.robust import faults
+
+        srv, g = self._server(max_attempts=3, batch_size=4)
+        n = 12
+        for i in range(n):
+            q = random_query_from_graph(g, 3, qtype="C", seed=i)
+            assert srv.submit(i, q)
+        # deterministic chaos: dispatches 1, 2 and 4 lose their worker
+        with faults.inject(faults.nth("journal_dispatch", 1, 2, 4)):
+            srv.drain()
+        faults.uninstall()
+        done = [r for r in srv.journal.values() if r.status == "done"]
+        failed = [r for r in srv.journal.values() if r.status == "failed"]
+        assert len(done) + len(failed) == n      # no request lost
+        events = srv.flight.events()
+        by_kind = {}
+        for e in events:
+            by_kind.setdefault(e["kind"], []).append(e)
+        # every served request produced a query event
+        assert len(by_kind["query"]) >= len(done)
+        redis = [e for e in by_kind["server"]
+                 if e["action"] == "redispatch"]
+        assert len(redis) >= 1                   # the chaos actually bit
+        gaveup = [e for e in by_kind["server"] if e["action"] == "failed"]
+        assert len(gaveup) == len(failed)
+        assert "qps=" in srv.stats_line()
+
+    def test_rejections_recorded(self):
+        srv, g = self._server(queue_limit=2)
+        assert not srv.submit(0, "(a:L0)-/->(")    # parse error
+        srv.submit(1, "(a:L0)-/->(b:L1)")
+        srv.submit(2, "(a:L0)-/->(b:L2)")
+        assert not srv.submit(3, "(a:L0)-/->(b:L3)")   # queue full
+        rejects = [e for e in srv.flight.events()
+                   if e["kind"] == "server" and e["action"] == "reject"]
+        assert [e["rid"] for e in rejects] == [0, 3]
+        assert rejects[0]["detail"] == "parse error"
+        assert "queue full" in rejects[1]["detail"]
+
+    def test_explicit_worker_loss_records_redispatch(self):
+        srv, g = self._server(max_attempts=2)
+        srv.submit(0, "(a:L0)-/->(b:L1)")
+        srv.step(fail=True)
+        redis = [e for e in srv.flight.events()
+                 if e["kind"] == "server" and e["action"] == "redispatch"]
+        assert len(redis) == 1
+        assert redis[0]["detail"] == "simulated worker loss"
+        srv.drain()
+        assert srv.journal[0].status == "done"

@@ -162,6 +162,60 @@ class TestMetrics:
         assert 'lat_bucket{le="0.1"} 1' in text
         assert 'lat_bucket{le="+Inf"} 1' in text
         assert 'lat_count 1' in text
+        assert 'lat_sum 0.05' in text
+
+    def test_histogram_quantiles_interpolated(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", buckets=(1.0, 10.0, 100.0))
+        for v in (0.5, 2.0, 3.0, 5.0, 50.0):
+            h.observe(v)
+        assert h.quantile(0.0) == pytest.approx(0.5)
+        assert h.quantile(1.0) == pytest.approx(50.0)
+        # the median rank lands in the (1, 10] bucket, interpolated within
+        med = h.quantile(0.5)
+        assert 1.0 <= med <= 10.0
+        s = h.summary()
+        assert s["p50"] == pytest.approx(med)
+        assert set(s) >= {"count", "mean", "min", "max",
+                          "p50", "p95", "p99"}
+        assert reg.histogram("empty").quantile(0.5) is None
+
+    def test_histogram_quantile_clamps_to_observed_range(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", buckets=(1.0, 1000.0))
+        # all mass in one wide bucket: interpolation must stay inside the
+        # observed [vmin, vmax], not wander across the bucket
+        for v in (4.0, 5.0, 6.0):
+            h.observe(v)
+        for q in (0.01, 0.5, 0.99):
+            assert 4.0 <= h.quantile(q) <= 6.0
+
+    def test_prometheus_quantile_gauges(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", buckets=(0.1, 1.0), op="read")
+        for v in (0.05, 0.2, 0.7):
+            h.observe(v)
+        text = prometheus_text(reg)
+        assert '# TYPE lat_quantile gauge' in text
+        assert text.count('# TYPE lat_quantile gauge') == 1
+        for q in ("0.5", "0.95", "0.99"):
+            assert f'lat_quantile{{op="read",quantile="{q}"}}' in text
+        # empty histograms emit no quantile lines
+        reg2 = MetricsRegistry()
+        reg2.histogram("lat")
+        assert "_quantile" not in prometheus_text(reg2)
+
+    def test_label_value_escaping(self):
+        from repro.obs.metrics import escape_label_value
+
+        assert escape_label_value('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+        reg = MetricsRegistry()
+        reg.counter("hits", path='a\nb"c\\d').inc()
+        text = prometheus_text(reg)
+        assert 'hits{path="a\\nb\\"c\\\\d"} 1' in text
+        # the raw newline never splits the series line
+        [line] = [ln for ln in text.splitlines() if ln.startswith("hits{")]
+        assert line.endswith("} 1")
 
 
 # ------------------------------------------------------------ engine traces
@@ -234,6 +288,40 @@ class TestEngineTraces:
         # unprofiled batch stays trace-free
         for b in eng.execute_many(qs):
             assert b.trace is None
+
+    def test_error_terminated_span_is_tagged(self):
+        from repro.robust import faults
+        from repro.robust.errors import InjectedFault
+
+        tr = Tracer("q")
+        with pytest.raises(InjectedFault):
+            with tr.span("labels"):
+                with faults.inject(faults.every("label_build", 1)):
+                    faults.maybe_fail("label_build")
+        faults.uninstall()
+        root = tr.finish()
+        sp = root.find("labels")
+        assert sp.attrs["error"] == "InjectedFault"
+        assert sp.attrs["status"] == "injected_fault"
+
+    def test_fault_injected_query_yields_error_tagged_trace(self):
+        """A profiled query killed mid-phase by an injected fault must
+        return an error-tagged span tree: the failing span (and the root)
+        carry the exception class and the stable status string."""
+        from repro.robust import faults
+
+        g = random_labeled_graph(120, avg_degree=2.5, n_labels=5, seed=7)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        with faults.inject(faults.every("label_build", 1)):
+            res = eng.execute("(a:L0)-/->(b:L1)", profile=True)
+        faults.uninstall()
+        assert res.stats.status == "injected_fault"
+        assert res.trace is not None
+        labels = res.trace.find("labels")
+        assert labels.attrs["error"] == "InjectedFault"
+        assert labels.attrs["status"] == "injected_fault"
+        assert res.trace.attrs["error"] == "InjectedFault"
+        assert res.trace.attrs["status"] == "injected_fault"
 
     def test_trace_timing_totals(self, engine):
         eng, g = engine

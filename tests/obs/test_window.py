@@ -1,0 +1,179 @@
+"""WindowedAggregator tests: rotation boundaries under an injected clock,
+retention, QPS / error-rate arithmetic, and the merged summary."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.obs import WindowedAggregator
+
+
+class FakeClock:
+    def __init__(self, t: float = 1000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture
+def clk():
+    return FakeClock()
+
+
+def agg(clk, **kw):
+    kw.setdefault("window_s", 10.0)
+    kw.setdefault("n_windows", 3)
+    return WindowedAggregator(clock=clk, **kw)
+
+
+class TestRotation:
+    def test_empty_aggregator(self, clk):
+        w = agg(clk)
+        assert w.window_count() == 0
+        s = w.summary()
+        assert s["merged"]["requests"] == 0
+        assert s["merged"]["error_rate"] == 0.0
+        assert s["windows"][-1]["series"] == {}
+        assert "p50=-" in w.summary_line()
+
+    def test_single_sample(self, clk):
+        w = agg(clk)
+        w.observe({"total": 0.002})
+        assert w.window_count() == 1
+        s = w.summary()
+        assert s["merged"]["requests"] == 1
+        assert s["merged"]["series"]["total"]["p99"] == \
+            pytest.approx(0.002, rel=0.01)
+
+    def test_observations_align_to_window_boundary(self, clk):
+        clk.t = 1007.5                       # mid-window
+        w = agg(clk)
+        w.observe({"total": 0.001})
+        assert w.summary()["windows"][-1]["t0"] == 1000.0
+
+    def test_boundary_rotation(self, clk):
+        clk.t = 1009.999
+        w = agg(clk)
+        w.observe({"total": 0.001})
+        clk.t = 1010.0                       # first tick of the next window
+        w.observe({"total": 0.002})
+        s = w.summary()
+        assert [win["t0"] for win in s["windows"]] == [1000.0, 1010.0]
+        assert [win["requests"] for win in s["windows"]] == [1, 1]
+
+    def test_same_window_no_rotation(self, clk):
+        w = agg(clk)
+        for dt in (0.0, 3.0, 9.999):
+            clk.t = 1000.0 + dt
+            w.observe({"total": 0.001})
+        assert w.window_count() == 1
+        assert w.summary()["windows"][-1]["requests"] == 3
+
+    def test_clock_jump_skips_empty_windows(self, clk):
+        w = agg(clk)
+        w.observe({"total": 0.001})
+        clk.t += 50.0                        # five widths later
+        w.observe({"total": 0.002})
+        s = w.summary()
+        # the gap is visible through t0, not materialized as empty windows
+        assert [win["t0"] for win in s["windows"]] == [1000.0, 1050.0]
+
+    def test_retention_cap(self, clk):
+        w = agg(clk, n_windows=3)
+        for i in range(8):
+            clk.t = 1000.0 + 10.0 * i
+            w.observe({"total": 0.001 * (i + 1)})
+        s = w.summary()
+        assert len(s["windows"]) == 4        # 3 closed + current
+        assert [win["t0"] for win in s["windows"]] == \
+            [1040.0, 1050.0, 1060.0, 1070.0]
+        # merged covers only what is retained
+        assert s["merged"]["requests"] == 4
+        assert w.total_requests == 8         # lifetime counter keeps all
+
+    def test_summary_rotates_without_observation(self, clk):
+        w = agg(clk)
+        w.observe({"total": 0.001})
+        clk.t += 25.0
+        s = w.summary()
+        # the old window closed; current is empty
+        assert s["windows"][-1]["requests"] == 0
+        assert s["windows"][0]["requests"] == 1
+
+
+class TestRates:
+    def test_qps_uses_elapsed_fraction_for_current_window(self, clk):
+        clk.t = 1000.0
+        w = agg(clk)
+        for _ in range(10):
+            w.observe({"total": 0.001})
+        clk.t = 1002.0                       # 2s into a 10s window
+        s = w.summary()
+        assert s["windows"][-1]["qps"] == pytest.approx(5.0)
+
+    def test_closed_window_qps_uses_full_width(self, clk):
+        w = agg(clk)
+        for _ in range(20):
+            w.observe({"total": 0.001})
+        clk.t += 10.0
+        w.observe({"total": 0.001})
+        s = w.summary()
+        assert s["windows"][0]["qps"] == pytest.approx(2.0)
+
+    def test_error_rate(self, clk):
+        w = agg(clk)
+        for i in range(8):
+            w.observe({"total": 0.001}, error=(i % 4 == 0))
+        s = w.summary()
+        assert s["windows"][-1]["errors"] == 2
+        assert s["windows"][-1]["error_rate"] == pytest.approx(0.25)
+        assert s["merged"]["error_rate"] == pytest.approx(0.25)
+
+
+class TestSeries:
+    def test_multiple_series_per_observation(self, clk):
+        w = agg(clk)
+        w.observe({"parse": 0.0001, "exec": 0.001, "total": 0.0012})
+        win = w.summary()["windows"][-1]
+        assert set(win["series"]) == {"exec", "parse", "total"}
+
+    def test_merged_quantiles_across_windows(self, clk):
+        w = agg(clk, n_windows=6)
+        # 100 fast in window 1, 100 slow in window 2: merged p50 must sit
+        # between the two modes, per-window p50s at the modes
+        for _ in range(100):
+            w.observe({"total": 0.001})
+        clk.t += 10.0
+        for _ in range(100):
+            w.observe({"total": 0.1})
+        s = w.summary()
+        w1, w2 = s["windows"]
+        assert w1["series"]["total"]["p50"] == pytest.approx(0.001, rel=0.02)
+        assert w2["series"]["total"]["p50"] == pytest.approx(0.1, rel=0.02)
+        merged = s["merged"]["series"]["total"]
+        assert merged["count"] == 200
+        assert merged["p50"] == pytest.approx(0.001, rel=0.02)
+        assert merged["p99"] == pytest.approx(0.1, rel=0.02)
+
+    def test_summary_line_format(self, clk):
+        w = agg(clk)
+        for _ in range(5):
+            w.observe({"total": 0.002}, error=False)
+        w.observe({"total": 0.002}, error=True)
+        clk.t += 1.0
+        line = w.summary_line()
+        assert "qps=" in line and "err=16.7%" in line
+        assert "p50=2.0ms" in line and "p99=2.0ms" in line
+        assert "(n=6, 1 windows)" in line
+
+    def test_clear(self, clk):
+        w = agg(clk)
+        w.observe({"total": 0.001})
+        w.clear()
+        assert w.window_count() == 0
+        assert w.total_requests == 0
+
+    def test_invalid_width_rejected(self, clk):
+        with pytest.raises(ValueError):
+            WindowedAggregator(window_s=0.0, clock=clk)

@@ -1,0 +1,142 @@
+"""Bench regression-gate tests: tolerance bands, asserted rows, mode
+mismatch downgrade, the history trajectory, and baseline provenance."""
+
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.regress import (append_history, compare, load_payload,
+                                main as regress_main)
+
+
+def payload(mode="quick", **rows):
+    return {
+        "schema_version": 3, "bench": "engine", "mode": mode,
+        "git_sha": "feedbeefcafe",
+        "timestamp": "2026-01-01T00:00:00Z",
+        "rows": [{"name": k, "us_per_call": float(v), "derived": {}}
+                 for k, v in rows.items()],
+    }
+
+
+BASE = payload(warm=1000.0, cold=40000.0, tiny=4.0)
+
+
+class TestCompare:
+    def test_unchanged_rows_pass(self):
+        r = compare(BASE, copy.deepcopy(BASE), tolerance=0.5,
+                    assert_rows=["warm", "cold", "tiny"])
+        assert r["ok"]
+        assert all(row["verdict"] == "ok" for row in r["rows"])
+
+    def test_within_tolerance_passes(self):
+        fresh = payload(warm=1400.0, cold=40000.0, tiny=4.0)
+        r = compare(BASE, fresh, tolerance=0.5, assert_rows=["warm"])
+        assert r["ok"]
+        assert r["rows"][0]["slowdown"] == pytest.approx(0.4)
+
+    def test_synthetic_2x_slowdown_fails(self):
+        fresh = payload(warm=2000.0, cold=40000.0, tiny=4.0)
+        r = compare(BASE, fresh, tolerance=0.5, assert_rows=["warm"])
+        assert not r["ok"]
+        assert r["rows"][0]["verdict"] == "fail"
+        assert "warm" in r["failures"][0]
+
+    def test_unasserted_slowdown_is_informational(self):
+        fresh = payload(warm=1000.0, cold=400000.0, tiny=4.0)
+        r = compare(BASE, fresh, tolerance=0.5, assert_rows=["warm"])
+        assert r["ok"]
+        assert r["rows"][1]["verdict"] == "informational"
+
+    def test_noise_floor_never_fails(self):
+        # a 4us row regressing 10x is timer noise, not signal
+        fresh = payload(warm=1000.0, cold=40000.0, tiny=40.0)
+        r = compare(BASE, fresh, tolerance=0.5,
+                    assert_rows=["tiny"], min_us=50.0)
+        assert r["ok"]
+        assert r["rows"][2]["verdict"] == "informational"
+
+    def test_mode_mismatch_downgrades_everything(self):
+        fresh = payload(mode="full", warm=9000.0, cold=40000.0, tiny=4.0)
+        r = compare(BASE, fresh, tolerance=0.5, assert_rows=["warm"])
+        assert r["ok"] and r["mode_mismatch"]
+        assert r["rows"][0]["verdict"] == "informational"
+
+    def test_new_and_missing_rows(self):
+        fresh = payload(warm=1000.0, cold=40000.0, fresh_only=7.0)
+        r = compare(BASE, fresh, assert_rows=[])
+        verdicts = {row["name"]: row["verdict"] for row in r["rows"]}
+        assert verdicts["tiny"] == "missing"
+        assert verdicts["fresh_only"] == "new"
+        assert r["ok"]                       # neither was asserted
+
+    def test_asserted_missing_row_fails(self):
+        fresh = payload(warm=1000.0, cold=40000.0)
+        r = compare(BASE, fresh, assert_rows=["tiny"])
+        assert not r["ok"]
+        assert "missing" in r["failures"][0]
+
+    def test_speedup_is_ok(self):
+        fresh = payload(warm=200.0, cold=40000.0, tiny=4.0)
+        r = compare(BASE, fresh, tolerance=0.5, assert_rows=["warm"])
+        assert r["ok"]
+        assert r["rows"][0]["slowdown"] < 0
+
+
+class TestHistoryAndCli:
+    def test_history_appends_jsonl(self, tmp_path):
+        hist = tmp_path / "BENCH_history.jsonl"
+        fresh = payload(warm=1100.0, cold=40000.0, tiny=4.0)
+        r = compare(BASE, fresh, assert_rows=["warm"])
+        append_history(str(hist), r, fresh)
+        append_history(str(hist), r, fresh)
+        lines = [json.loads(line) for line in
+                 hist.read_text().splitlines()]
+        assert len(lines) == 2
+        assert lines[0]["git_sha"] == "feedbeefcafe"
+        assert lines[0]["bench"] == "engine" and lines[0]["ok"]
+        names = {row["name"] for row in lines[0]["rows"]}
+        assert names == {"warm", "cold", "tiny"}
+
+    def test_cli_pass_and_fail_exit_codes(self, tmp_path, capsys):
+        base_p = tmp_path / "base.json"
+        fresh_p = tmp_path / "fresh.json"
+        hist_p = tmp_path / "hist.jsonl"
+        base_p.write_text(json.dumps(BASE))
+        fresh_p.write_text(json.dumps(copy.deepcopy(BASE)))
+        rc = regress_main(["--baseline", str(base_p),
+                           "--fresh", str(fresh_p),
+                           "--assert-rows", "warm,cold",
+                           "--history", str(hist_p)])
+        assert rc == 0
+        assert "PASS" in capsys.readouterr().out
+        fresh_p.write_text(json.dumps(
+            payload(warm=5000.0, cold=40000.0, tiny=4.0)))
+        rc = regress_main(["--baseline", str(base_p),
+                           "--fresh", str(fresh_p),
+                           "--assert-rows", "warm",
+                           "--history", str(hist_p)])
+        assert rc == 1
+        assert "FAIL" in capsys.readouterr().out
+        assert len(hist_p.read_text().splitlines()) == 2
+
+    def test_load_payload_rejects_non_bench_json(self, tmp_path):
+        p = tmp_path / "x.json"
+        p.write_text('{"foo": 1}')
+        with pytest.raises(ValueError):
+            load_payload(str(p))
+
+    def test_committed_baselines_load(self):
+        from pathlib import Path
+
+        # the real committed artifacts stay consumable by the gate
+        root = Path(__file__).resolve().parents[1]
+        for name in ("BENCH_engine.json", "BENCH_mjoin.json"):
+            p = load_payload(str(root / name))
+            assert p["rows"] and p["mode"] in ("quick", "full")
+            r = compare(p, copy.deepcopy(p),
+                        assert_rows=[p["rows"][0]["name"]])
+            assert r["ok"]
