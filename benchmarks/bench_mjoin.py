@@ -28,11 +28,12 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core.mjoin import device_intersector, mjoin
+from repro.core.mjoin import mjoin
 from repro.core.ordering import get_order
 from repro.core.rig import build_rig
 from repro.data.graphs import random_labeled_graph
 from repro.data.queries import random_query_from_graph
+from repro.obs.ledger import get_ledger
 
 from ._harness import bench_main
 from .common import Row
@@ -74,14 +75,18 @@ def run(quick: bool = True, device: bool = False) -> List[Row]:
     counts = {}
     shipped = {}
 
+    ledger = get_ledger().transfers
+
     def _h2d(method):
-        """Cumulative host->device traffic of the method's intersector
-        (slab uploads for frontier-device, index uploads for resident)."""
+        """Cumulative host->device traffic of the method's transfer
+        ledger site: ``slab_ship`` for frontier-device's (F, K, W)
+        uploads, ``index_vectors`` for the resident path's (F, K) index
+        shipping (the one-off ``resident_upload`` matrix transfer is
+        reported separately as ``resident_kb``)."""
         if method == "frontier-device":
-            di = device_intersector()
-            return di.h2d_bytes if di is not None else 0
-        if method == "frontier-device-resident" and rig.resident is not None:
-            return rig.resident.h2d_bytes
+            return ledger.h2d_bytes(site="slab_ship")
+        if method == "frontier-device-resident":
+            return ledger.h2d_bytes(site="index_vectors")
         return 0
 
     for method in methods:

@@ -32,14 +32,23 @@ Three checks, designed to run on every CI push:
    ``compile_s``, and per-call ``kernel_s`` must stay far below the
    shape's compile cost (the regression this guards: the first dispatch
    used to fold its jit into ``kernel_s`` and poison profiles);
-6. **artifact** — the one-shot trace tree plus the measurements land in a
+6. **ledger attribution & overhead** (jax only) — the transfer ledger must
+   show the resident path's architectural win: per-run ``index_vectors``
+   traffic at least ``--min-ledger-ratio`` (default 50x) below the slab
+   path's ``slab_ship`` traffic, both read as ledger site deltas around
+   identical enumerations; and arming the ledger (two dict bumps under a
+   lock per dispatch) must cost under ``--max-ledger-overhead`` (default
+   3%) vs the disarmed path, A/B'd call-by-call with
+   ``LEDGER.arm()``/``disarm()`` around the same compiled dispatch;
+7. **artifact** — the one-shot trace tree plus the measurements land in a
    versioned JSON file for upload.
 
   PYTHONPATH=src python -m benchmarks.profile_smoke \
       [--baseline BENCH_engine.json] [--out TRACE_profile_smoke.json] \
       [--flight-out FLIGHT_profile_smoke.jsonl] \
       [--max-overhead 0.05] [--max-governance-overhead 0.03] \
-      [--max-telemetry-overhead 0.03]
+      [--max-telemetry-overhead 0.03] [--min-ledger-ratio 50] \
+      [--max-ledger-overhead 0.03]
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ import time
 
 from repro.data.graphs import random_labeled_graph
 from repro.engine import Budget, Engine, EngineOptions, render_trace
+from repro.obs.ledger import get_ledger
 
 LIFECYCLE = {"parse", "canonicalize", "plan", "labels", "rig", "enumerate",
              "materialize"}
@@ -121,6 +131,30 @@ def _paired_telemetry_us(eng, query, repeats: int = 60):
     return armed[len(armed) // 2] * 1e6, off[len(off) // 2] * 1e6
 
 
+def _paired_ledger_us(dispatch, repeats: int = 60):
+    """Interleaved ledger-armed/disarmed dispatch medians (microseconds).
+    The only difference between variants is whether the per-dispatch
+    byte charges land in the transfer ledger."""
+    led = get_ledger()
+    armed, off = [], []
+    try:
+        for _ in range(repeats):
+            led.arm()
+            t0 = time.perf_counter()
+            dispatch()
+            t1 = time.perf_counter()
+            led.disarm()
+            dispatch()
+            t2 = time.perf_counter()
+            armed.append(t1 - t0)
+            off.append(t2 - t1)
+    finally:
+        led.arm()
+    armed.sort()
+    off.sort()
+    return armed[len(armed) // 2] * 1e6, off[len(off) // 2] * 1e6
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_engine.json",
@@ -140,6 +174,14 @@ def main() -> int:
                     help="max allowed warm cost of the always-on telemetry "
                          "(event record + window sketches) vs the disarmed "
                          "path (fraction, same-process A/B)")
+    ap.add_argument("--min-ledger-ratio", type=float, default=50.0,
+                    help="min required slab_ship/index_vectors per-run h2d "
+                         "ratio between the slab and resident device paths "
+                         "(ledger site deltas; jax only)")
+    ap.add_argument("--max-ledger-overhead", type=float, default=0.03,
+                    help="max allowed dispatch cost of the armed transfer "
+                         "ledger vs the disarmed path (fraction, "
+                         "same-process A/B; jax only)")
     ap.add_argument("--enforce", action="store_true",
                     help="fail (exit 1) when the overhead bound is "
                          "exceeded; default reports only")
@@ -248,6 +290,75 @@ def main() -> int:
         print(f"[profile-smoke] device timing attribution: compile "
               f"{c1 * 1e3:.1f}ms (once), repeat kernel {k2 * 1e3:.2f}ms")
 
+    # ---- 6. ledger: resident transfer win + armed overhead --------------
+    ledger_ratio = None
+    ledger_ratio_ok = True
+    ledger_overhead = None
+    ledger_ok = True
+    try:
+        import jax  # noqa: F401
+
+        from repro.core.mjoin import mjoin
+        from repro.core.ordering import get_order
+        from repro.core.rig import build_rig
+        from repro.data.queries import random_query_from_graph
+        from repro.jaxgm.frontier import DeviceIntersector
+    except ImportError:
+        print("[profile-smoke] jax unavailable; ledger attribution checks "
+              "skipped")
+    else:
+        # the architectural win, read off the ledger: the slab path ships
+        # padded (F, K, W) bit matrices per level, the resident path ships
+        # (F, K) int32 index vectors against the uploaded matrix.  Both
+        # enumerate the same workload, so the per-run site deltas are
+        # directly comparable.
+        led = get_ledger().transfers
+        gl = random_labeled_graph(600, avg_degree=3.0, n_labels=2,
+                                  kind="powerlaw", seed=11)
+        gl.reachability()
+        gl.adj_bits(), gl.adj_bits_t()
+        ql = random_query_from_graph(gl, n_nodes=4, qtype="D", seed=23,
+                                     extra_edge_prob=0.3)
+        rigl = build_rig(gl, ql.transitive_reduction())
+        orderl = get_order(rigl, "jo")
+
+        def _enum(method):
+            return mjoin(rigl, orderl, materialize=False,
+                         max_tuples=1_000_000, method=method)
+
+        _enum("frontier-device")                 # warm the compile cache
+        s0 = led.h2d_bytes(site="slab_ship")
+        _enum("frontier-device")
+        slab_run = led.h2d_bytes(site="slab_ship") - s0
+        _enum("frontier-device-resident")        # cold: books the upload
+        i0 = led.h2d_bytes(site="index_vectors")
+        _enum("frontier-device-resident")
+        idx_run = led.h2d_bytes(site="index_vectors") - i0
+        rigl.release_resident()
+        assert slab_run and idx_run, \
+            "device enumerations must book ledger transfers"
+        ledger_ratio = slab_run / idx_run
+        ledger_ratio_ok = ledger_ratio >= args.min_ledger_ratio
+        print(f"[profile-smoke] ledger attribution: slab path ships "
+              f"{slab_run / 1024:.1f}KB/run vs resident "
+              f"{idx_run / 1024:.1f}KB/run -> {ledger_ratio:.0f}x "
+              f"(bound >={args.min_ledger_ratio:.0f}x"
+              f"{'' if args.enforce else ', report-only'})")
+
+        # armed-vs-disarmed cost of the booking itself, on one compiled
+        # dispatch shape (interleaved: same rationale as the gates above)
+        dil = DeviceIntersector(mode="xla")
+        slabl = np.ones((64, 2, 4), dtype=np.uint64)
+        dil(slabl)                               # compile once
+        led_us, unled_us = _paired_ledger_us(lambda: dil(slabl))
+        ledger_overhead = led_us / unled_us - 1.0
+        ledger_ok = ledger_overhead <= args.max_ledger_overhead
+        print(f"[profile-smoke] dispatch ledger-armed: {led_us:.1f}us vs "
+              f"disarmed {unled_us:.1f}us -> ledger overhead "
+              f"{ledger_overhead * 100:+.1f}% "
+              f"(bound {args.max_ledger_overhead * 100:.0f}%"
+              f"{'' if args.enforce else ', report-only'})")
+
     # profiled cost is informational: profiling is opt-in per query
     t0 = time.perf_counter()
     for _ in range(10):
@@ -256,9 +367,9 @@ def main() -> int:
     print(f"[profile-smoke] warm profiled: {prof_us:.1f}us "
           f"({prof_us / warm_us:.2f}x unprofiled)")
 
-    # ---- 6. artifact ----------------------------------------------------
+    # ---- 7. artifact ----------------------------------------------------
     artifact = {
-        "schema_version": 2,
+        "schema_version": 3,
         "trace": res.trace.to_dict(),
         "warm_unprofiled_us": round(warm_us, 1),
         "warm_profiled_us": round(prof_us, 1),
@@ -271,6 +382,12 @@ def main() -> int:
         "warm_telemetry_us": round(tel_us, 1),
         "telemetry_overhead": round(tel_overhead, 4),
         "max_telemetry_overhead": args.max_telemetry_overhead,
+        "ledger_ratio": None if ledger_ratio is None
+        else round(ledger_ratio, 1),
+        "min_ledger_ratio": args.min_ledger_ratio,
+        "ledger_overhead": None if ledger_overhead is None
+        else round(ledger_overhead, 4),
+        "max_ledger_overhead": args.max_ledger_overhead,
         "count": res.count,
     }
     with open(args.out, "w") as f:
@@ -285,6 +402,10 @@ def main() -> int:
         failed.append("governance overhead above bound")
     if not tel_ok:
         failed.append("telemetry overhead above bound")
+    if not ledger_ratio_ok:
+        failed.append("resident transfer ratio below bound")
+    if not ledger_ok:
+        failed.append("ledger overhead above bound")
     if failed and args.enforce:
         for msg in failed:
             print(f"[profile-smoke] FAIL: {msg}", file=sys.stderr)

@@ -51,6 +51,13 @@ class GMOptions:
     # shared device CircuitBreaker; None = ungoverned (zero overhead)
     budget: Optional[object] = field(default=None, repr=False, compare=False)
     breaker: Optional[object] = field(default=None, repr=False, compare=False)
+    # warm-path reuse (PR 10): a cached device-resident executor
+    # (jaxgm.frontier.ResidentIntersector) from a previous enumeration of
+    # the same (graph, canonical query).  Attached to the freshly built RIG
+    # when its shape fingerprint matches, skipping the re-upload; a
+    # mismatch is ignored (a fresh upload happens as usual).
+    resident_executor: Optional[object] = field(default=None, repr=False,
+                                                compare=False)
 
 
 @dataclass
@@ -73,6 +80,9 @@ class MatchResult:
     resident_bytes: int = 0              # resident matrix footprint
     resident_dispatches: int = 0         # fused gather+AND device dispatches
     small_frontier_host_routed: int = 0  # slabs host-routed below threshold
+    # transfer ledger (PR 10): host<->device bytes this match moved
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
     rig: Optional[RIG] = field(default=None, repr=False)
 
 
@@ -144,6 +154,14 @@ class MatchStream:
     def small_frontier_host_routed(self) -> int:
         return self.stream.stats.small_frontier_host_routed
 
+    @property
+    def h2d_bytes(self) -> int:
+        return self.stream.stats.h2d_bytes
+
+    @property
+    def d2h_bytes(self) -> int:
+        return self.stream.stats.d2h_bytes
+
 
 class GM:
     """Reusable matcher bound to one data graph (shares the reachability
@@ -182,6 +200,13 @@ class GM:
                             expand_method=opt.expand_method,
                             intervals=self.intervals, trace=trace,
                             budget=opt.budget)
+            ex = opt.resident_executor
+            if (ex is not None and rig.resident is None
+                    and not getattr(ex, "closed", False)):
+                from ..jaxgm.frontier import resident_fingerprint
+                if getattr(ex, "fingerprint",
+                           None) == resident_fingerprint(rig):
+                    rig.resident = ex     # warm reuse: skip the re-upload
             with trace.span("order") as osp:
                 order = (list(range(q.n)) if rig.is_empty()
                          else get_order(rig, opt.ordering))
@@ -223,6 +248,7 @@ class GM:
                                  if st.method == "frontier-device-resident"
                                  else 0),
             small_frontier_host_routed=st.small_frontier_host_routed,
+            h2d_bytes=st.h2d_bytes, d2h_bytes=st.d2h_bytes,
             rig=rig)
 
     def match_stream(self, q: PatternQuery,
@@ -285,7 +311,13 @@ class GM:
                 truncated=res.stats.truncated,
                 enum_method=res.stats.method,
                 deadline_exceeded=res.stats.deadline_exceeded,
-                degradations=res.stats.degradations, rig=rig))
+                degradations=res.stats.degradations,
+                resident_uploads=res.stats.resident_uploads,
+                resident_bytes=res.stats.resident_bytes,
+                small_frontier_host_routed=(
+                    res.stats.small_frontier_host_routed),
+                h2d_bytes=res.stats.h2d_bytes,
+                d2h_bytes=res.stats.d2h_bytes, rig=rig))
         return out, dispatches
 
 

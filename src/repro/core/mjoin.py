@@ -104,6 +104,13 @@ class MJoinStats:
     resident_upload_s: float = 0.0
     resident_pages: int = 0
     small_frontier_host_routed: int = 0
+    # transfer ledger (PR 10): host<->device bytes moved by THIS
+    # enumeration (uploads, slab ships, index vectors, pair/row readback),
+    # measured as intersector-counter deltas around each dispatch so
+    # breaker retries and degraded attempts are included.  The process-wide
+    # per-site breakdown lives in repro.obs.ledger.
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
 
 
 @dataclass
@@ -179,6 +186,8 @@ def resident_intersector(rig: RIG, stats: Optional[MJoinStats] = None):
     """
     global _DEVICE_FAILED
     res = getattr(rig, "resident", None)
+    if res is not None and getattr(res, "closed", False):
+        res = rig.resident = None       # torn down (evicted): rebuild
     if res is None and not _DEVICE_FAILED:
         try:
             from ..jaxgm.frontier import ResidentIntersector
@@ -194,9 +203,32 @@ def resident_intersector(rig: RIG, stats: Optional[MJoinStats] = None):
         if stats is not None:
             stats.resident_uploads += 1
             stats.resident_upload_s += res.upload_s
+            stats.h2d_bytes += res.nbytes
     if res is not None and stats is not None:
         stats.resident_bytes = res.nbytes
     return res
+
+
+class _XferDelta:
+    """Record an intersector's cumulative h2d/d2h counter movement into
+    ``stats`` around a dispatch (context manager; exception-safe so failed
+    attempts still account the bytes they shipped)."""
+
+    __slots__ = ("res", "stats", "_h", "_d")
+
+    def __init__(self, res, stats: Optional[MJoinStats]):
+        self.res, self.stats = res, stats
+
+    def __enter__(self):
+        self._h = getattr(self.res, "h2d_bytes", 0)
+        self._d = getattr(self.res, "d2h_bytes", 0)
+        return self
+
+    def __exit__(self, *exc):
+        if self.stats is not None and self.res is not None:
+            self.stats.h2d_bytes += getattr(self.res, "h2d_bytes", 0) - self._h
+            self.stats.d2h_bytes += getattr(self.res, "d2h_bytes", 0) - self._d
+        return False
 
 
 # ---------------------------------------------------------------- backtrack
@@ -351,10 +383,11 @@ def _slab_intersect(rig: RIG, cs, slab: np.ndarray,
                          for (j, ei, isf) in cs], axis=1)    # (f, K, W)
         t0 = time.perf_counter()
         try:
-            if breaker is not None:
-                acc, counts = breaker.call(lambda: intersector(rows))
-            else:
-                acc, counts = intersector(rows)
+            with _XferDelta(intersector, stats):
+                if breaker is not None:
+                    acc, counts = breaker.call(lambda: intersector(rows))
+                else:
+                    acc, counts = intersector(rows)
         except (DeviceFailure, BreakerOpen):
             stats.device_s += time.perf_counter() - t0
             if "host-intersect" not in stats.degradations:
@@ -611,11 +644,12 @@ def _resident_frontier_events(rig: RIG, order: List[int], cons, limit,
         if state["dev_ok"] and not (small_rows and len(slab) < small_rows):
             t0 = time.perf_counter()
             try:
-                if breaker is not None:
-                    handle, counts = breaker.call(
-                        lambda: res.intersect(cs, slab, w64))
-                else:
-                    handle, counts = res.intersect(cs, slab, w64)
+                with _XferDelta(res, stats):
+                    if breaker is not None:
+                        handle, counts = breaker.call(
+                            lambda: res.intersect(cs, slab, w64))
+                    else:
+                        handle, counts = res.intersect(cs, slab, w64)
             except (DeviceFailure, BreakerOpen):
                 stats.device_s += time.perf_counter() - t0
                 _degrade()
@@ -633,11 +667,12 @@ def _resident_frontier_events(rig: RIG, order: List[int], cons, limit,
         if handle is not None:
             t0 = time.perf_counter()
             try:
-                if breaker is not None:
-                    rid, cid = breaker.call(
-                        lambda: res.expand(handle, n_i, want))
-                else:
-                    rid, cid = res.expand(handle, n_i, want)
+                with _XferDelta(res, stats):
+                    if breaker is not None:
+                        rid, cid = breaker.call(
+                            lambda: res.expand(handle, n_i, want))
+                    else:
+                        rid, cid = res.expand(handle, n_i, want)
             except (DeviceFailure, BreakerOpen):
                 stats.device_s += time.perf_counter() - t0
                 _degrade()
@@ -888,8 +923,16 @@ def mjoin(rig: RIG, order: List[int], limit: Optional[int] = DEFAULT_LIMIT,
                         breaker=breaker, small_rows=small_frontier_rows)
             except FrontierOverflow:
                 degr = stats.degradations + ["backtrack"]
+                old = stats
                 stats = MJoinStats(method="backtrack",   # strategy that ran
-                                   degradations=degr)
+                                   degradations=degr,
+                                   # bytes already moved before the overflow
+                                   # stay on the query's record
+                                   h2d_bytes=old.h2d_bytes,
+                                   d2h_bytes=old.d2h_bytes,
+                                   resident_uploads=old.resident_uploads,
+                                   resident_bytes=old.resident_bytes,
+                                   resident_upload_s=old.resident_upload_s)
                 esp.set(overflow_fallback=True)
                 count, assign = _mjoin_backtrack(rig, order, cons, limit,
                                                  materialize, max_tuples,
@@ -1214,7 +1257,9 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
                 del active[idx]
             except FrontierOverflow:
                 degr = job.stats.degradations + ["backtrack"]
-                stats = MJoinStats(method="backtrack", degradations=degr)
+                stats = MJoinStats(method="backtrack", degradations=degr,
+                                   h2d_bytes=job.stats.h2d_bytes,
+                                   d2h_bytes=job.stats.d2h_bytes)
                 cons = _constraints(rig.query, order)
                 count, _ = _mjoin_backtrack(rig, order, cons, limit,
                                             materialize=False, max_tuples=0,
@@ -1228,6 +1273,9 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
             idxs = list(requests)
             big, spans = stack_slabs([requests[i] for i in idxs])
             t0 = time.perf_counter()
+            isect0 = intersector            # pre-degrade reference
+            h2d0 = getattr(isect0, "h2d_bytes", 0)
+            d2h0 = getattr(isect0, "d2h_bytes", 0)
             if intersector is not None:
                 try:
                     if breaker is not None:
@@ -1247,10 +1295,19 @@ def mjoin_batched(jobs: Sequence[Tuple[RIG, List[int], Optional[int]]],
             else:
                 acc, counts = _host_intersect_block(big)
             share = (time.perf_counter() - t0) / len(idxs)
+            # the ledger holds the exact fused-dispatch bytes; per-job stats
+            # get an equal share (the padded fused slab is not separable
+            # per job), mirroring the device_s share above
+            h2d_share = (getattr(isect0, "h2d_bytes", 0)
+                         - h2d0) // len(idxs)
+            d2h_share = (getattr(isect0, "d2h_bytes", 0)
+                         - d2h0) // len(idxs)
             dispatches += 1
             for i, (off, f, k, w) in zip(idxs, spans):
                 active[i].active_s += share
                 active[i].stats.device_s += share
+                active[i].stats.h2d_bytes += h2d_share
+                active[i].stats.d2h_bytes += d2h_share
                 active[i].reply = (np.ascontiguousarray(acc[off:off + f, :w]),
                                    counts[off:off + f])
     return results, dispatches  # type: ignore[return-value]

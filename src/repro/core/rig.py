@@ -65,6 +65,9 @@ class RIG:
     # built lazily on first frontier-device-resident enumeration and cached
     # here so repeated enumerations over one RIG upload the index only once
     resident: Optional[object] = field(default=None, repr=False)
+    # ledger attribution key for device transfers / resident footprint
+    # (the owning graph's identity; "-" = anonymous)
+    graph_key: str = "-"
 
     def cos_indices(self, q: int) -> np.ndarray:
         return self.cand[q]
@@ -88,6 +91,14 @@ class RIG:
 
     def is_empty(self) -> bool:
         return any(len(c) == 0 for c in self.cand)
+
+    def release_resident(self) -> int:
+        """Deterministically tear down the cached device-resident executor
+        (if any), crediting the transfer ledger; returns bytes freed."""
+        res, self.resident = self.resident, None
+        if res is not None and hasattr(res, "close"):
+            return res.close()
+        return 0
 
 
 # ----------------------------------------------------------- node prefilter
@@ -227,7 +238,8 @@ def build_rig(graph: DataGraph, q: PatternQuery,
             budget.charge_rig(f.nbytes + b.nbytes, f"rig_expand[{ei}]")
         fwd.append(f)
         bwd.append(b)
-    rig = RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd, sim=sim)
+    rig = RIG(query=q, n_graph=n, cand=cand, fwd=fwd, bwd=bwd, sim=sim,
+              graph_key=getattr(graph, "graph_key", "-"))
     if trace.enabled:      # per-edge RIG edge counts cost a popcount each
         expand_sp.set(expand_method=expand_method,
                       edge_counts=[rig.edge_count(e)

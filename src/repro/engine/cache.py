@@ -38,16 +38,22 @@ class LRUCache:
     Counters are plain ints by default; ``bind_metrics(registry, name)``
     additionally mirrors them onto registry counters
     (``cache_hits{cache=name}`` etc.) so engine-wide snapshots see them —
-    the ints stay authoritative for existing callers."""
+    the ints stay authoritative for existing callers.
+
+    ``on_evict(key, value)`` is invoked for every entry leaving the cache
+    involuntarily — capacity eviction, ``drop_where`` and ``clear`` — so
+    values owning external resources (device-resident RIG matrices) are
+    torn down the moment their entry dies instead of leaking until GC."""
 
     def __init__(self, capacity: int = 256, *, metrics=None,
-                 name: str = ""):
+                 name: str = "", on_evict=None):
         assert capacity > 0
         self.capacity = capacity
         self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.on_evict = on_evict
         self._c_hits = self._c_misses = self._c_evictions = None
         if metrics is not None:
             self.bind_metrics(metrics, name or "lru")
@@ -78,10 +84,12 @@ class LRUCache:
             self._d.move_to_end(key)
         self._d[key] = value
         while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            k, v = self._d.popitem(last=False)
             self.evictions += 1
             if self._c_evictions is not None:
                 self._c_evictions.inc()
+            if self.on_evict is not None:
+                self.on_evict(k, v)
 
     def __len__(self) -> int:
         return len(self._d)
@@ -93,11 +101,17 @@ class LRUCache:
         """Remove entries whose key matches ``pred``; returns the count."""
         dead = [k for k in self._d if pred(k)]
         for k in dead:
-            del self._d[k]
+            v = self._d.pop(k)
+            if self.on_evict is not None:
+                self.on_evict(k, v)
         return len(dead)
 
     def clear(self) -> None:
+        items = list(self._d.items())
         self._d.clear()
+        if self.on_evict is not None:
+            for k, v in items:
+                self.on_evict(k, v)
 
 
 @dataclass

@@ -46,6 +46,7 @@ from ..core.query import PatternQuery
 from ..obs.events import QueryEvent
 from ..obs.export import prometheus_text, render_trace
 from ..obs.flight import FlightRecorder
+from ..obs.ledger import get_ledger
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_TRACER, Span, Tracer
 from ..obs.window import WindowedAggregator
@@ -56,7 +57,8 @@ from .cache import GraphContext, LRUCache
 from .canonical import canonical_key
 from .language import Vocab, fmt, parse
 from .planner import DEVICE, HOST, DeviceCaps, Plan, Planner
-from .stats import RigStats
+from .stats import (ESTIMATE_QUANTITIES, Calibration, EstimateRecord,
+                    RigStats)
 
 __all__ = ["EngineOptions", "EngineStats", "EngineResult", "EngineStream",
            "Engine"]
@@ -155,6 +157,11 @@ class EngineStats:
     rig_edges: int = 0
     truncated: bool = False
     enum_method: str = "backtrack"   # strategy that ran (device: jaxgm's)
+    # transfer ledger (PR 10): bytes this query moved host<->device and the
+    # device-resident RIG footprint it executed against (0 off-device)
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    resident_bytes: int = 0
     # resource governance (PR 7): ``status`` is the stable outcome string
     # ("ok", or the error taxonomy's status — "deadline_exceeded",
     # "resource_exhausted", "transient", ...); ``partial`` marks a
@@ -291,8 +298,19 @@ class EngineStream:
 
 @dataclass
 class _PlanEntry:
+    """One cached plan plus everything warm repeats of the query reuse:
+    observed RIG statistics (re-planning), the planner's committed
+    estimates with their observed reconciliation (EXPLAIN ANALYZE), the
+    per-graph calibration the ratios feed, and — for resident-planned
+    queries — the uploaded device executor, so repeats skip the re-upload.
+    The plan cache's ``on_evict`` closes ``resident`` (crediting the
+    ledger) the moment the entry leaves the cache."""
+
     plan: Plan
     rig: RigStats = field(default_factory=RigStats)
+    est: EstimateRecord = field(default_factory=EstimateRecord)
+    cal: Optional[Calibration] = None
+    resident: Optional[object] = field(default=None, repr=False)
 
 
 _RESIDENT_EPOCH = itertools.count()
@@ -434,7 +452,13 @@ class Engine:
         # per-engine metrics registry: counters/caches/histograms below all
         # live here, so snapshot()/metrics_text() is one consistent view
         self.metrics = MetricsRegistry()
-        self._plan_cache = LRUCache(self.options.plan_cache_size)
+        # memory & transfer ledger (PR 10): the process-wide ledger is
+        # published into this registry at snapshot/exposition time; the
+        # plan cache's eviction hook credits it when a cached resident
+        # executor is torn down
+        self.ledger = get_ledger()
+        self._plan_cache = LRUCache(self.options.plan_cache_size,
+                                    on_evict=self._evict_plan_entry)
         self._plan_cache.bind_metrics(self.metrics, "plan")
         # memo: reduced-query structure -> canonical key, so the exact
         # (up to n! permutations) canonicalization runs once per distinct
@@ -473,8 +497,32 @@ class Engine:
         self._h_results = h("result_count")
         # resident-RIG upload footprint (observed once per fresh upload)
         self._h_resident_bytes = h("resident_bytes")
+        # planner accountability (PR 10): observed/estimated ratio per
+        # quantity (1.0 = the planner was exactly right), fed on every
+        # observed execution; plus the bytes freed by plan-cache evictions
+        # tearing down cached resident executors
+        self._h_misest = {q: h("planner_misestimation_ratio", quantity=q)
+                          for q in ESTIMATE_QUANTITIES}
+        self._c_resident_evicted = self.metrics.counter(
+            "cache_resident_evicted_bytes")
         if graph is not None:
             self.register(graph, label_names=label_names)
+
+    def _evict_plan_entry(self, key, entry) -> None:
+        """Plan-cache teardown: an entry leaving the cache (capacity
+        eviction, resident-graph eviction, clear) releases the device
+        executor it cached — the ledger is credited by ``close()`` and the
+        freed bytes land on ``cache_resident_evicted_bytes``."""
+        ex = getattr(entry, "resident", None)
+        if ex is None:
+            return
+        entry.resident = None
+        try:
+            freed = ex.close()
+        except Exception:
+            return
+        if freed:
+            self._c_resident_evicted.inc(freed)
 
     # ------------------------------------------------------------ residency
     def register(self, graph: DataGraph, label_names=None) -> GraphContext:
@@ -483,6 +531,12 @@ class Engine:
         if key not in self._residents:
             self._residents[key] = _Resident(graph, self.options,
                                              label_names=label_names)
+            # ledger attribution key: every transfer/allocation this graph
+            # causes is charged under it.  Callers (e.g. the server's
+            # per-tenant rollups) may pre-stamp their own key; the epoch
+            # default only fills the gap.
+            if not getattr(graph, "graph_key", None):
+                graph.graph_key = f"g{self._residents[key].epoch}"
             while len(self._residents) > self.options.max_resident_graphs:
                 _, dead = self._residents.popitem(last=False)
                 # epochs are never reused, so the evicted graph's plan
@@ -561,11 +615,17 @@ class Engine:
             key = (res.epoch, ckey)
             entry: Optional[_PlanEntry] = self._plan_cache.get(key)
             if entry is None:
-                entry = _PlanEntry(plan=res.planner.plan(qr))
+                plan = res.planner.plan(qr)
+                entry = _PlanEntry(plan=plan,
+                                   est=EstimateRecord(est=plan.estimates()),
+                                   cal=res.planner.calibration)
                 self._plan_cache.put(key, entry)
             else:
                 stats.plan_cache_hit = True
                 entry.plan = res.planner.refine(entry.plan, qr, entry.rig)
+                # the refined plan's estimates are the committed ones this
+                # execution is accountable to
+                entry.est.est = entry.plan.estimates()
             if trace.enabled:
                 p = entry.plan
                 sp.set(cached=stats.plan_cache_hit, backend=p.backend,
@@ -616,6 +676,56 @@ class Engine:
                      f"limit={self.options.limit}")
         return "\n".join(lines)
 
+    def explain_analyze(self, query: QueryLike,
+                        graph: Optional[DataGraph] = None,
+                        materialize: Optional[bool] = None,
+                        budget=_UNSET) -> str:
+        """EXPLAIN ANALYZE: *execute* the query, then render the plan with
+        its committed estimates reconciled against what the execution
+        observed — per-quantity estimate/observed/ratio rows, which planner
+        decisions would flip under the observed statistics, and the bytes
+        the execution moved (per-query plus the graph's ledger rollup)."""
+        res = self._resident(graph)
+        result = self.execute(query, graph=graph, materialize=materialize,
+                              budget=budget)
+        # re-prepare (a guaranteed plan-cache hit) to fetch the entry the
+        # execution just reconciled
+        qr, key, entry = self._prepare(query, res, EngineStats())
+        p, st = entry.plan, result.stats
+        cached = "warm" if st.plan_cache_hit else "cold"
+        lines = [
+            f"query {key}  [analyzed: {cached} plan, backend={st.backend} "
+            f"enum={st.enum_method} count={result.count} "
+            f"status={st.status}]",
+            f"├─ plan         backend={p.backend} enum={p.enum_method} "
+            f"ordering={p.ordering} sim={p.sim_algo} chunk={p.chunk_size}",
+        ]
+        for r in p.reasons:
+            lines.append(f"│     · {r}")
+        lines.append("├─ estimates    (observed / estimated; "
+                     "x1 = planner exactly right)")
+        for quantity, est, obs, ratio in entry.est.rows():
+            obs_s = "-" if obs is None else f"{obs:.6g}"
+            ratio_s = "-" if ratio is None else f"x{ratio:.3g}"
+            lines.append(f"│     {quantity:<15} est={est:<12.6g} "
+                         f"obs={obs_s:<12} {ratio_s}")
+        decisions = res.planner.analyze(p, qr, entry.est)
+        if decisions:
+            lines.append("├─ decisions")
+            for name, planned, observed, flips in decisions:
+                mark = "WOULD FLIP" if flips else "holds"
+                lines.append(f"│     {name:<22} planned: {planned}  "
+                             f"observed: {observed}  [{mark}]")
+        lines.append(f"├─ transfers    h2d={st.h2d_bytes} B  "
+                     f"d2h={st.d2h_bytes} B  "
+                     f"resident={st.resident_bytes} B")
+        roll = self.ledger.rollup(getattr(res.ctx.graph, "graph_key", "-"))
+        lines.append(f"└─ graph ledger h2d={roll['h2d_bytes']} B  "
+                     f"d2h={roll['d2h_bytes']} B  "
+                     f"resident_live={roll['resident_live_bytes']} B  "
+                     f"watermark={roll['resident_watermark_bytes']} B")
+        return "\n".join(lines)
+
     # ------------------------------------------------------------ execution
     def _arm_budget(self, budget) -> Optional[Budget]:
         """Resolve a per-call ``budget=`` argument: ``_UNSET`` falls back to
@@ -643,6 +753,38 @@ class Engine:
             return False
         return observe
 
+    def _account_estimates(self, entry: _PlanEntry, **observed) -> None:
+        """Reconcile one observed execution against the plan's committed
+        estimates: per-quantity obs/est ratios land in the entry's
+        :class:`EstimateRecord` (EXPLAIN ANALYZE), the registry's
+        misestimation histograms, and the graph's :class:`Calibration`
+        (which scales this graph's future fresh estimates)."""
+        ratios = entry.est.record(**observed)
+        for quantity, r in ratios.items():
+            hist = self._h_misest.get(quantity)
+            if hist is not None:
+                hist.observe(r)
+        if entry.cal is not None and ratios:
+            entry.cal.record(ratios)
+
+    def _harvest_resident(self, entry: _PlanEntry, m) -> None:
+        """Move a match's device-resident RIG executor (if the resident
+        enumerator ran) from the throwaway RIG onto the plan-cache entry,
+        so the next execution of the same canonical query skips the
+        re-upload.  A replaced executor is closed (ledger credited)."""
+        rig = getattr(m, "rig", None)
+        ex = getattr(rig, "resident", None) if rig is not None else None
+        if ex is None or getattr(ex, "closed", False):
+            return
+        rig.resident = None
+        old = entry.resident
+        if old is not None and old is not ex:
+            try:
+                old.close()
+            except Exception:
+                pass
+        entry.resident = ex
+
     def _observe_host(self, entry: _PlanEntry, stats: EngineStats,
                       m, observe: bool = True) -> None:
         """Record one host execution (one-shot, streamed, or batched) into
@@ -654,6 +796,9 @@ class Engine:
         stats.rig_edges = m.rig_edges
         stats.truncated = m.truncated
         stats.enum_method = m.enum_method
+        stats.h2d_bytes = getattr(m, "h2d_bytes", 0)
+        stats.d2h_bytes = getattr(m, "d2h_bytes", 0)
+        self._harvest_resident(entry, m)
         uploads = getattr(m, "resident_uploads", 0)
         if uploads:
             self.counters["resident_uploads"] += uploads
@@ -664,6 +809,12 @@ class Engine:
         routed = getattr(m, "small_frontier_host_routed", 0)
         if routed:
             self.counters["small_frontier_host_routed"] += routed
+        # the resident footprint this query executed against: the fresh
+        # upload when it paid one, else the warm executor it reused
+        rb = getattr(m, "resident_bytes", 0)
+        if not rb and stats.enum_method == "frontier-device-resident":
+            rb = getattr(entry.resident, "nbytes", 0) or 0
+        stats.resident_bytes = rb
         observe = self._governance(stats, m, observe)
         if observe:
             entry.rig.observe(rig_nodes=m.rig_nodes, rig_edges=m.rig_edges,
@@ -674,7 +825,29 @@ class Engine:
             self._h_rig_edges.observe(m.rig_edges)
             self._h_sim_passes.observe(m.sim_passes)
             self._h_results.observe(m.count)
+            obs = dict(cardinality=float(m.count),
+                       rig_nodes=float(m.rig_nodes),
+                       rig_edges=float(m.rig_edges))
+            if rb:
+                obs["resident_bytes"] = float(rb)
+            self._account_estimates(entry, **obs)
         self.counters["host_exec"] += 1
+
+    def _arm_transfer_attribution(self, res: _Resident, entry: _PlanEntry,
+                                  opts) -> None:
+        """Pre-dispatch ledger/residency wiring for one host execution:
+        hand the entry's cached device executor to ``prepare_rig`` (warm
+        repeats skip the re-upload) and stamp the shared slab intersector
+        with this graph's ledger key so its h2d/d2h charges attribute to
+        the right graph."""
+        opts.resident_executor = entry.resident
+        if entry.plan.enum_method == "frontier-device":
+            try:
+                isect = device_intersector()
+            except Exception:
+                isect = None
+            if isect is not None:
+                isect.ledger_key = getattr(res.ctx.graph, "graph_key", "-")
 
     def _run_host(self, res: _Resident, qr: PatternQuery, entry: _PlanEntry,
                   stats: EngineStats, materialize: bool,
@@ -686,6 +859,7 @@ class Engine:
         opts = entry.plan.gm_options(limit=self.options.limit,
                                      materialize=materialize,
                                      budget=budget, breaker=self.breaker)
+        self._arm_transfer_attribution(res, entry, opts)
         attempts = 1 if budget is None else max(1, budget.max_attempts)
         for attempt in range(1, attempts + 1):
             stats.attempts = max(stats.attempts, attempt)
@@ -743,6 +917,10 @@ class Engine:
                           matching_s=0.0, enumerate_s=0.0, count=dev.count)
         self._h_rig_nodes.observe(stats.rig_nodes)
         self._h_results.observe(dev.count)
+        # the vmapped matcher reports no RIG edge count — only reconcile
+        # the quantities the device path actually observes
+        self._account_estimates(entry, cardinality=float(dev.count),
+                                rig_nodes=float(stats.rig_nodes))
         return dev.count, dev.tuples
 
     def _finish(self, stats: EngineStats, count: int,
@@ -940,6 +1118,7 @@ class Engine:
         stats.chunk_size = chunk
         opts = entry.plan.gm_options(limit=lim, materialize=True,
                                      budget=b, breaker=self.breaker)
+        self._arm_transfer_attribution(res, entry, opts)
         # setup (RIG build) is eager: a transient fault here is retried,
         # a typed QueryError propagates to the caller — there is no stream
         # to hand back yet.  Once iteration starts, a blown deadline ends
@@ -1102,6 +1281,8 @@ class Engine:
                 limit=self.options.limit, materialize=False,
                 budget=prepared[i][5], breaker=self.breaker)
                 for i in fd_idx]
+            for o, i in zip(gm_opts, fd_idx):
+                self._arm_transfer_attribution(res, prepared[i][2], o)
             ms, dispatches = res.gm().match_batch_frontier(
                 [prepared[i][0] for i in fd_idx], gm_opts,
                 intersector=device_intersector(),
@@ -1221,11 +1402,15 @@ class Engine:
                          ) -> Dict[str, object]:
         """Atomic point-in-time copy of every engine metric (counters,
         cache series, phase/size histograms) — see
-        :meth:`repro.obs.metrics.MetricsRegistry.snapshot`."""
+        :meth:`repro.obs.metrics.MetricsRegistry.snapshot`.  The transfer
+        ledger is published into the registry first, so ``ledger_*`` series
+        reflect this instant."""
+        self.ledger.publish(self.metrics)
         return self.metrics.snapshot(prefix)
 
     def metrics_text(self) -> str:
         """Prometheus-style text exposition of the engine registry."""
+        self.ledger.publish(self.metrics)
         return prometheus_text(self.metrics)
 
     @staticmethod

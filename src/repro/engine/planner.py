@@ -40,7 +40,7 @@ from ..core.matcher import GMOptions
 from ..core.mjoin import DEFAULT_LIMIT
 from ..core.query import PatternQuery
 from ..core.slabgeom import round_up
-from .stats import GraphStats, RigStats
+from .stats import Calibration, EstimateRecord, GraphStats, RigStats
 
 __all__ = ["DeviceCaps", "Plan", "Planner"]
 
@@ -77,7 +77,19 @@ class Plan:
     small_frontier_rows: int = 0
     est_cost: float = 0.0
     est_card: float = 0.0
+    # committed size estimates (PR 10): reconciled against observed values
+    # by the engine's EstimateRecord, audited via Engine.explain_analyze
+    est_rig_nodes: float = 0.0
+    est_rig_edges: float = 0.0
+    est_resident_bytes: int = 0
     reasons: Tuple[str, ...] = ()
+
+    def estimates(self) -> dict:
+        """The committed estimates, keyed like ESTIMATE_QUANTITIES."""
+        return {"cardinality": self.est_card,
+                "rig_nodes": self.est_rig_nodes,
+                "rig_edges": self.est_rig_edges,
+                "resident_bytes": float(self.est_resident_bytes)}
 
     def batch_group(self) -> str:
         """Execution lane for cross-request batching in ``execute_many``:
@@ -150,6 +162,11 @@ class Planner:
         self.caps = caps or DeviceCaps()
         self.force_backend = force_backend
         self.force_enum = force_enum
+        # per-graph misestimation medians (the planner is per resident
+        # graph): the engine records observed/estimated ratios here and
+        # plan()/refine() scale fresh estimates by them, so warm traffic
+        # self-corrects systematic estimator bias
+        self.calibration = Calibration()
 
     # ------------------------------------------------------------- backend
     def _pick_backend(self, q: PatternQuery,
@@ -199,11 +216,26 @@ class Planner:
         rows = 1 + sum(ms[e.src] + ms[e.dst] for e in q.edges)
         return rows * w_lanes * 4
 
+    def _calibrated(self, quantity: str, est: float,
+                    reasons: Optional[List[str]] = None) -> float:
+        """Scale a fresh estimate by the graph's observed misestimation
+        median for the same quantity (identity while cold)."""
+        r = self.calibration.median(quantity)
+        if r is None or r == 1.0:
+            return est
+        if reasons is not None:
+            reasons.append(
+                f"{quantity} estimate calibrated x{r:.3g} (median of "
+                f"{self.calibration.observations(quantity)} observed "
+                f"ratios)")
+        return est * r
+
     def _frontier_kind(self, q: PatternQuery,
                        reasons: Optional[List[str]] = None) -> str:
         if not self.caps.frontier_device:
             return "frontier"
-        est = self._est_resident_bytes(q)
+        est = int(self._calibrated("resident_bytes",
+                                   self._est_resident_bytes(q), reasons))
         if est <= self.caps.resident_max_bytes:
             if reasons is not None:
                 reasons.append(
@@ -217,11 +249,14 @@ class Planner:
                 f"({self.caps.resident_max_bytes} B): per-level slabs")
         return "frontier-device"
 
-    def _pick_enum(self, q: PatternQuery, reasons: List[str]) -> str:
+    def _pick_enum(self, q: PatternQuery, reasons: List[str],
+                   est_card: Optional[float] = None) -> str:
         if self.force_enum is not None:
             reasons.append(f"enum method forced to {self.force_enum}")
             return self.force_enum
-        if self.stats.estimate_cardinality(q) >= FRONTIER_EST_RESULTS:
+        if est_card is None:
+            est_card = self.stats.estimate_cardinality(q)
+        if est_card >= FRONTIER_EST_RESULTS:
             reasons.append(
                 f"estimated answer set >= {FRONTIER_EST_RESULTS}: "
                 f"batched frontier enumeration")
@@ -247,8 +282,9 @@ class Planner:
         backend = self._pick_backend(q, reasons)
         sim = self._pick_sim(q, reasons)
         check = self._pick_check(q, reasons)
-        enum = self._pick_enum(q, reasons)
-        est_card = self.stats.estimate_cardinality(q)
+        est_card = self._calibrated(
+            "cardinality", self.stats.estimate_cardinality(q), reasons)
+        enum = self._pick_enum(q, reasons, est_card)
         return Plan(backend=backend, sim_algo=sim, check_method=check,
                     enum_method=enum,
                     chunk_size=self.pick_chunk_size(est_card),
@@ -258,6 +294,9 @@ class Planner:
                                     "frontier-device-resident") else 0),
                     est_cost=self.stats.estimate_cost(q),
                     est_card=est_card,
+                    est_rig_nodes=self.stats.estimate_rig_nodes(q),
+                    est_rig_edges=self.stats.estimate_rig_edges(q),
+                    est_resident_bytes=self._est_resident_bytes(q),
                     reasons=tuple(reasons))
 
     def refine(self, plan: Plan, q: PatternQuery,
@@ -301,3 +340,53 @@ class Planner:
                     f"observed tiny RIG ({rig.rig_nodes} nodes, "
                     f"{rig.count} results): backtracking wins",))
         return plan
+
+    def analyze(self, plan: Plan, q: PatternQuery,
+                est: EstimateRecord) -> List[Tuple[str, str, str, bool]]:
+        """Which planner decisions would flip under observed stats.
+
+        Returns ``(decision, planned, under_observed, flips)`` rows for the
+        backend, the enum method, and resident eligibility, re-evaluating
+        each decision rule with the :class:`EstimateRecord`'s observed
+        values in place of the estimates (the same rules ``refine`` applies
+        on warm traffic).  Forced choices never flip.
+        """
+        obs = est.obs
+        rig_nodes = obs.get("rig_nodes")
+        count = obs.get("cardinality")
+        rows: List[Tuple[str, str, str, bool]] = []
+
+        backend = plan.backend
+        if (self.force_backend is None and backend == DEVICE
+                and rig_nodes is not None
+                and rig_nodes <= TINY_RIG_NODES):
+            backend = HOST
+        rows.append(("backend", plan.backend, backend,
+                     backend != plan.backend))
+
+        enum = plan.enum_method
+        if self.force_enum is None and rig_nodes is not None \
+                and count is not None:
+            if enum == "backtrack" and (rig_nodes >= FRONTIER_RIG_NODES
+                                        or count >= FRONTIER_MIN_RESULTS):
+                enum = self._frontier_kind(q)
+            elif (enum != "backtrack" and rig_nodes < TINY_RIG_NODES
+                  and count < FRONTIER_MIN_RESULTS):
+                enum = "backtrack"
+        rows.append(("enum_method", plan.enum_method, enum,
+                     enum != plan.enum_method))
+
+        if self.caps.frontier_device:
+            cap = self.caps.resident_max_bytes
+            planned_fit = plan.est_resident_bytes <= cap
+            observed = obs.get("resident_bytes")
+            obs_fit = (observed <= cap) if observed else planned_fit
+            rows.append((
+                "resident_eligibility",
+                f"est {plan.est_resident_bytes} B "
+                f"{'<=' if planned_fit else '>'} cap {cap} B",
+                (f"observed {int(observed)} B "
+                 f"{'<=' if obs_fit else '>'} cap {cap} B"
+                 if observed else "no resident execution observed"),
+                obs_fit != planned_fit))
+        return rows

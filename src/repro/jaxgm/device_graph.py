@@ -20,6 +20,7 @@ import numpy as np
 from ..core import bitset as hostbits
 from ..core.graph import DataGraph
 from ..kernels import ops, packed
+from ..obs.ledger import get_ledger
 
 PAD_LABEL = -2  # label id of padding nodes: never matches any query label
 
@@ -79,10 +80,15 @@ def from_host(graph: DataGraph, block: int = 512,
         ridx = graph.reachability()
         reach = _repack_pad(ridx.reach_bits, n, n_pad)
         reach_t = _repack_pad(ridx.bits_t(), n, n_pad)
-    return DeviceGraph(n=n, n_pad=n_pad,
-                       labels=jnp.asarray(labels),
-                       adj=jnp.asarray(adj), adj_t=jnp.asarray(adj_t),
-                       reach=jnp.asarray(reach), reach_t=jnp.asarray(reach_t))
+    dg = DeviceGraph(n=n, n_pad=n_pad,
+                     labels=jnp.asarray(labels),
+                     adj=jnp.asarray(adj), adj_t=jnp.asarray(adj_t),
+                     reach=jnp.asarray(reach), reach_t=jnp.asarray(reach_t))
+    shipped = (labels.nbytes + adj.nbytes + adj_t.nbytes
+               + reach.nbytes + reach_t.nbytes)
+    get_ledger().transfers.h2d("label_build", shipped,
+                               getattr(graph, "graph_key", "-"))
+    return dg
 
 
 def stacked_matrices(dg: DeviceGraph) -> jax.Array:

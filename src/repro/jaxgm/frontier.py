@@ -56,9 +56,10 @@ from ..core.slabgeom import (padded_slab_bytes, padded_slab_shape,
 from ..kernels.gather_intersect import (expand_pairs, gather_intersect_pallas,
                                         gather_intersect_xla)
 from ..kernels.intersect import intersect_pallas, intersect_xla
+from ..obs.ledger import get_ledger
 
 __all__ = ["DeviceIntersector", "ResidentIntersector", "resolve_mode",
-           "DEFAULT_MODE"]
+           "DEFAULT_MODE", "resident_fingerprint"]
 
 # process-wide mode pin: None = auto (pallas on TPU, xla elsewhere)
 DEFAULT_MODE: Optional[str] = None
@@ -74,6 +75,16 @@ def resolve_mode(mode: Optional[str] = None) -> str:
         raise ValueError(f"unknown device mode: {mode!r} "
                          f"(expected one of {_MODES})")
     return mode
+
+
+def resident_fingerprint(rig) -> tuple:
+    """Shape signature of a RIG's packed matrices.  BuildRIG is
+    deterministic per (graph, canonical query), so a cached
+    :class:`ResidentIntersector` whose fingerprint matches a freshly built
+    RIG was packed from identical matrices and can be re-attached without
+    re-uploading."""
+    return (tuple(m.shape for m in rig.fwd),
+            tuple(m.shape for m in rig.bwd))
 
 
 class DeviceIntersector:
@@ -95,6 +106,10 @@ class DeviceIntersector:
         self.compile_s = 0.0      # one-time AOT compile time per shape
         self.peak_slab_bytes = 0  # largest padded slab actually allocated
         self.h2d_bytes = 0        # cumulative host->device slab traffic
+        self.d2h_bytes = 0        # cumulative device->host readback traffic
+        # ledger attribution key; the slab intersector is a process-global
+        # singleton shared across graphs, so callers may retag per dispatch
+        self.ledger_key = "-"
         self._compiled = {}
 
     @property
@@ -133,7 +148,11 @@ class DeviceIntersector:
             rows = padded
         self.peak_slab_bytes = max(self.peak_slab_bytes,
                                    padded_slab_bytes(f, k, w64))
+        # rows is padded, so rows.nbytes == padded_slab_bytes(f, k, w64):
+        # the ledger charge equals the dispatched bytes by construction
         self.h2d_bytes += rows.nbytes
+        get_ledger().transfers.h2d("slab_ship", rows.nbytes,
+                                   self.ledger_key)
         fn = self._executor(fp, kp, wp)
         # fence with block_until_ready so kernel_s is true device time, not
         # async-dispatch latency (the conversion below would hide the wait)
@@ -142,9 +161,13 @@ class DeviceIntersector:
         jax.block_until_ready((and32, counts))
         self.kernel_s += time.perf_counter() - t0
         self.calls += 1
-        and_rows = np.ascontiguousarray(
-            np.asarray(and32)[:f, :w]).view(np.uint64)
-        return and_rows, np.asarray(counts)[:f].astype(np.int64)
+        and_np = np.asarray(and32)
+        counts_np = np.asarray(counts)
+        d2h = and_np.nbytes + counts_np.nbytes
+        self.d2h_bytes += d2h
+        get_ledger().transfers.d2h("slab_ship", d2h, self.ledger_key)
+        and_rows = np.ascontiguousarray(and_np[:f, :w]).view(np.uint64)
+        return and_rows, counts_np[:f].astype(np.int64)
 
 
 class _ResidentSlab:
@@ -172,20 +195,28 @@ class ResidentIntersector:
 
     def __init__(self, matrix32: np.ndarray, fwd_off: List[int],
                  bwd_off: List[int], zero_row: int,
-                 mode: Optional[str] = None):
+                 mode: Optional[str] = None, key: str = "-"):
         self.mode = resolve_mode(mode)
+        self.key = key
         t0 = time.perf_counter()
         self.matrix = jnp.asarray(matrix32)
         jax.block_until_ready(self.matrix)
         self.upload_s = time.perf_counter() - t0
         self.nbytes = int(self.matrix.size) * 4
+        ledger = get_ledger()
+        ledger.transfers.h2d("resident_upload", self.nbytes, key)
+        # the packed matrix stays device-resident until close(): charge the
+        # resident ledger now, credit on close (conservation invariant)
+        self._alloc = ledger.resident.charge(key, self.nbytes)
         self.w_lanes = int(self.matrix.shape[1])
         self.fwd_off = fwd_off
         self.bwd_off = bwd_off
         self.zero_row = zero_row
+        self.fingerprint: Optional[tuple] = None
         self.calls = 0            # gather-intersect dispatches
         self.expand_calls = 0     # pair-page dispatches
         self.h2d_bytes = 0        # cumulative host->device index traffic
+        self.d2h_bytes = 0        # cumulative device->host readback traffic
         self.kernel_s = 0.0       # fenced per-call device time (no compile)
         self.compile_s = 0.0      # one-time AOT compile time per shape
         self.peak_dispatch_bytes = 0
@@ -195,7 +226,36 @@ class ResidentIntersector:
     def build(cls, rig, mode: Optional[str] = None) -> "ResidentIntersector":
         from .device_graph import pack_resident_rig
         matrix32, fwd_off, bwd_off, zero_row = pack_resident_rig(rig)
-        return cls(matrix32, fwd_off, bwd_off, zero_row, mode=mode)
+        res = cls(matrix32, fwd_off, bwd_off, zero_row, mode=mode,
+                  key=getattr(rig, "graph_key", "-"))
+        res.fingerprint = resident_fingerprint(rig)
+        return res
+
+    @property
+    def closed(self) -> bool:
+        return self._alloc is None
+
+    def close(self) -> int:
+        """Release the device-resident matrix and credit the ledger.
+        Idempotent; returns the bytes credited (0 if already closed)."""
+        credited = get_ledger().resident.credit(self._alloc)
+        self._alloc = None
+        matrix, self.matrix = getattr(self, "matrix", None), None
+        self._compiled = {}
+        if matrix is not None:
+            try:
+                matrix.delete()
+            except Exception:
+                pass            # already deleted / backend shutting down
+        return credited
+
+    def __del__(self):
+        # GC safety net: an executor dropped without close() must still
+        # credit the ledger or the conservation invariant drifts
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def rows_cap(self, max_bytes: int, k: int, at_most: int) -> int:
         """Largest slab height whose padded dispatch transient fits
@@ -256,7 +316,10 @@ class ResidentIntersector:
             idx = np.vstack([idx, pad])
         w32 = 2 * w64
         fn = self._intersect_exec(fp, k, w32)
+        # idx is padded, so idx.nbytes == pow2_at_least(f) * k * 4: charged
+        # bytes equal shipped bytes
         self.h2d_bytes += idx.nbytes
+        get_ledger().transfers.h2d("index_vectors", idx.nbytes, self.key)
         self.peak_dispatch_bytes = max(
             self.peak_dispatch_bytes,
             resident_dispatch_bytes(f, k, self.w_lanes))
@@ -265,8 +328,12 @@ class ResidentIntersector:
         jax.block_until_ready((acc, counts))
         self.kernel_s += time.perf_counter() - t0
         self.calls += 1
+        counts_np = np.asarray(counts)
+        self.d2h_bytes += counts_np.nbytes
+        get_ledger().transfers.d2h("index_vectors", counts_np.nbytes,
+                                   self.key)
         return (_ResidentSlab(acc, f),
-                np.asarray(counts)[:f].astype(np.int64))
+                counts_np[:f].astype(np.int64))
 
     def expand(self, handle: _ResidentSlab, n_i: int, want: int
                ) -> Tuple[np.ndarray, np.ndarray]:
@@ -285,6 +352,9 @@ class ResidentIntersector:
             t0 = time.perf_counter()
             lanes = (n_i + 31) // 32          # fetch only the live lanes
             rows = np.asarray(handle.acc[:handle.f, :lanes])
+            self.d2h_bytes += rows.nbytes
+            get_ledger().transfers.d2h("pair_extract_d2h", rows.nbytes,
+                                       self.key)
             bits = np.unpackbits(np.ascontiguousarray(rows).view(np.uint8),
                                  axis=1, bitorder="little")[:, :n_i]
             rid, cid = np.nonzero(bits)
@@ -299,5 +369,9 @@ class ResidentIntersector:
         jax.block_until_ready((rid, cid))
         self.kernel_s += time.perf_counter() - t0
         self.expand_calls += 1
-        return (np.asarray(rid)[:want].astype(np.int64),
-                np.asarray(cid)[:want].astype(np.int64))
+        rid_np, cid_np = np.asarray(rid), np.asarray(cid)
+        page = rid_np.nbytes + cid_np.nbytes   # full pages ship, then slice
+        self.d2h_bytes += page
+        get_ledger().transfers.d2h("pair_extract_d2h", page, self.key)
+        return (rid_np[:want].astype(np.int64),
+                cid_np[:want].astype(np.int64))

@@ -87,8 +87,17 @@ class QueryServer:
                  capacity=4096, deadline_s=30.0, max_attempts=3,
                  impl="reference", engine: Optional[Engine] = None,
                  profile: bool = False, budget: Optional[Budget] = None,
-                 queue_limit: Optional[int] = None):
+                 queue_limit: Optional[int] = None,
+                 tenant: Optional[str] = None):
         self.graph = graph
+        # ledger attribution: every device transfer/allocation this graph
+        # causes is charged under its key — a caller-supplied tenant name
+        # makes ``ledger_rollup()`` a per-tenant accounting surface
+        # (pre-stamped before engine registration, which would otherwise
+        # assign an anonymous epoch key)
+        if tenant is not None:
+            graph.graph_key = tenant
+        self.tenant = getattr(graph, "graph_key", None)
         # device_min_nodes=0: the server is the device-serving driver, so
         # any query that fits the device caps goes through the vmapped
         # matcher regardless of graph size; wide queries plan onto the host.
@@ -116,6 +125,13 @@ class QueryServer:
     def metrics_text(self) -> str:
         """Prometheus-style dump of engine + cache + server series."""
         return self.engine.metrics_text()
+
+    def ledger_rollup(self) -> Dict[str, int]:
+        """This tenant's device-memory/transfer account: cumulative h2d
+        and d2h bytes charged under the served graph's ledger key, its
+        live device-resident footprint, and that footprint's watermark."""
+        key = self.tenant or getattr(self.graph, "graph_key", None)
+        return self.engine.ledger.rollup(key if key else "-")
 
     def stats_line(self) -> str:
         """One windowed-telemetry summary line (QPS, error rate,

@@ -13,6 +13,8 @@
 from .events import BreakerEvent, QueryEvent, ServerEvent
 from .export import prometheus_text, render_trace, trace_to_json
 from .flight import FlightRecorder
+from .ledger import (LEDGER, Ledger, ResidentLedger, TransferLedger,
+                     get_ledger)
 from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry)
 from .sketch import QuantileSketch
@@ -26,4 +28,5 @@ __all__ = [
     "QuantileSketch", "WindowedAggregator",
     "QueryEvent", "BreakerEvent", "ServerEvent", "FlightRecorder",
     "trace_to_json", "render_trace", "prometheus_text",
+    "TransferLedger", "ResidentLedger", "Ledger", "LEDGER", "get_ledger",
 ]

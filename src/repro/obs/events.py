@@ -22,7 +22,7 @@ from typing import Any, ClassVar, Dict, List
 __all__ = ["EVENT_SCHEMA_VERSION", "QueryEvent", "BreakerEvent",
            "ServerEvent", "event_dict"]
 
-EVENT_SCHEMA_VERSION = 1
+EVENT_SCHEMA_VERSION = 2    # v2: ledger byte tags on QueryEvent
 
 
 def event_dict(event: Any) -> Dict[str, Any]:
@@ -60,6 +60,11 @@ class QueryEvent:
     label_cache_hit: bool = False
     rig_nodes: int = 0
     rig_edges: int = 0
+    # transfer ledger (PR 10): bytes this request moved host<->device and
+    # the device-resident RIG footprint it executed against (0 off-device)
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    resident_bytes: int = 0
     parse_s: float = 0.0
     plan_s: float = 0.0
     exec_s: float = 0.0
@@ -81,6 +86,9 @@ class QueryEvent:
             plan_cache_hit=stats.plan_cache_hit,
             label_cache_hit=stats.label_cache_hit,
             rig_nodes=stats.rig_nodes, rig_edges=stats.rig_edges,
+            h2d_bytes=getattr(stats, "h2d_bytes", 0),
+            d2h_bytes=getattr(stats, "d2h_bytes", 0),
+            resident_bytes=getattr(stats, "resident_bytes", 0),
             parse_s=stats.parse_s, plan_s=stats.plan_s,
             exec_s=stats.exec_s, total_s=stats.total_s)
 
@@ -100,6 +108,8 @@ class QueryEvent:
             "plan_cache_hit": self.plan_cache_hit,
             "label_cache_hit": self.label_cache_hit,
             "rig_nodes": self.rig_nodes, "rig_edges": self.rig_edges,
+            "h2d_bytes": self.h2d_bytes, "d2h_bytes": self.d2h_bytes,
+            "resident_bytes": self.resident_bytes,
             "parse_s": self.parse_s, "plan_s": self.plan_s,
             "exec_s": self.exec_s, "total_s": self.total_s,
         }

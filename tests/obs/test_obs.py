@@ -471,3 +471,57 @@ class TestExplain:
         eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
         out = eng.explain("(a:L0)-/->(b:L1)")
         assert "backend=" in out and "├─ parse" in out
+
+
+# ------------------------------------------------- ledger exposition (PR 10)
+class TestLedgerExposition:
+    def test_metrics_text_has_ledger_and_misestimation_series(self):
+        from repro.obs.ledger import LEDGER
+        LEDGER.reset()
+        g = random_labeled_graph(200, avg_degree=2.5, n_labels=4, seed=2)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        q = _query(g, seed=4, n=3)
+        eng.execute(q)
+        eng.execute(q)                     # warm: ratios recorded twice
+        text = eng.metrics_text()
+        # ledger series are published into the engine registry on dump
+        assert "ledger_resident_charged_bytes" in text
+        assert "ledger_resident_credited_bytes" in text
+        assert "ledger_resident_live_bytes" in text
+        assert "ledger_resident_watermark_bytes" in text
+        assert "cache_resident_evicted_bytes" in text
+        # misestimation histograms carry observations for every reconciled
+        # quantity (resident_bytes only when a resident execution happened)
+        assert ('planner_misestimation_ratio_count{quantity="cardinality"}'
+                in text)
+        assert ('planner_misestimation_ratio_count{quantity="rig_nodes"}'
+                in text)
+        snap = eng.metrics_snapshot()
+        key = 'planner_misestimation_ratio{quantity="cardinality"}'
+        assert snap[key]["count"] == 2
+
+    def test_query_events_carry_byte_tags(self):
+        from repro.obs.ledger import LEDGER
+        LEDGER.reset()
+        g = random_labeled_graph(200, avg_degree=2.5, n_labels=4, seed=2)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        eng.execute(_query(g, seed=4, n=3))
+        ev = eng.flight.events()[-1]
+        for field in ("h2d_bytes", "d2h_bytes", "resident_bytes"):
+            assert field in ev and ev[field] == 0      # host-only execution
+
+    def test_explain_analyze_renders_estimates_and_transfers(self):
+        from repro.obs.ledger import LEDGER
+        LEDGER.reset()
+        g = random_labeled_graph(200, avg_degree=2.5, n_labels=4, seed=2)
+        eng = Engine(g, options=EngineOptions(device_min_nodes=10 ** 9))
+        q = _query(g, seed=4, n=3)
+        eng.execute(q)
+        out = eng.explain_analyze(q)      # executes, then reconciles
+        assert "estimates" in out and "warm plan" in out
+        for quantity in ("cardinality", "rig_nodes", "rig_edges"):
+            assert quantity in out
+        assert "x" in out                  # at least one obs/est ratio
+        assert "decisions" in out
+        assert "transfers" in out and "graph ledger" in out
+        assert eng.counters["queries"] == 2
